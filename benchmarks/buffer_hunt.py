@@ -1,0 +1,81 @@
+"""Buffer hunt: compile one cell and rank the largest HLO tensors.
+
+The dry-run profiling loop's microscope — finds which intermediate is
+responsible for a temp-memory blowup and which computation (entry / layer
+scan / inner scan) it lives in.
+
+    PYTHONPATH=src python -m benchmarks.buffer_hunt --arch jamba-1.5-large-398b \
+        --shape train_4k [--multi-pod] [--top 20]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=16)
+    ap.add_argument("--min-mb", type=float, default=64.0)
+    args = ap.parse_args()
+
+    from repro.distributed.context import data_axes
+    from repro.launch.hlo_analysis import (parse_computations,
+                                           while_body_depths, _SHAPE_RE,
+                                           _DTYPE_BYTES)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    daxes = [a for a in ("pod", "data") if a in mesh.shape]
+    dcount = int(np.prod([mesh.shape[a] for a in daxes]))
+    fn, sds, sh, donate, meta = build_cell(args.arch, args.shape, mesh)
+    with mesh, data_axes(daxes, dcount):
+        compiled = jax.jit(fn, in_shardings=sh,
+                           donate_argnums=donate).lower(*sds).compile()
+    m = compiled.memory_analysis()
+    print(f"arg={m.argument_size_in_bytes/1e9:.2f}GB "
+          f"out={m.output_size_in_bytes/1e9:.2f}GB "
+          f"temp={m.temp_size_in_bytes/1e9:.2f}GB\n")
+    hlo = compiled.as_text()
+    comps = parse_computations(hlo)
+    depths = while_body_depths(comps)
+    seen = defaultdict(lambda: [0, 0, "", ""])
+    for cname, lines in comps.items():
+        for ln in lines:
+            if "=" not in ln:
+                continue
+            lhs = ln.split("=", 1)[1]
+            head = lhs.strip().split("(")[0]
+            b = 0
+            for dt, dims in _SHAPE_RE.findall(head):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in (dims.split(",") if dims else []):
+                    n *= int(d)
+                b += n * _DTYPE_BYTES[dt]
+            if b < args.min_mb * 1e6:
+                continue
+            shape_key = head.strip()[:70]
+            op = re.search(r"\)?\s*([a-z\-]+)\(", lhs)
+            seen[shape_key][0] = b
+            seen[shape_key][1] += 1
+            seen[shape_key][2] = f"d{depths.get(cname, 0)}"
+            seen[shape_key][3] = (op.group(1) if op else "?")
+    rows = sorted(seen.items(), key=lambda kv: -kv[1][0])[: args.top]
+    for shape_key, (b, cnt, depth, op) in rows:
+        print(f"{b/1e9:8.2f}GB x{cnt:4d} {depth:3s} {op:18s} {shape_key}")
+
+
+if __name__ == "__main__":
+    main()

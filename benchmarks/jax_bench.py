@@ -1,0 +1,70 @@
+"""Framework-layer benchmarks: grad compression wire cost, mask compilation,
+data-pipeline query throughput — the paper's structures doing LM work."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # roaring grad compression: ratio + encode/decode time
+    from repro.grad_comp import compress_leaf, compression_ratio, decompress_leaf
+    n = 1 << 20
+    g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    for pct in ([1] if quick else [1, 5]):
+        k = n * pct // 100
+        t0 = time.perf_counter()
+        c = compress_leaf(g, k)
+        jax.block_until_ready(c.values)
+        enc_us = (time.perf_counter() - t0) * 1e6
+        r = compression_ratio(c, n)
+        rows.append((f"grad_comp/topk{pct}%/1M", round(enc_us, 1), round(r, 4)))
+
+    # mask compilation throughput at long_500k geometry
+    from repro.sparsity import build_arch_mask, compile_mask, mask_density
+    nb = 512 if quick else 4096
+    t0 = time.perf_counter()
+    m = build_arch_mask(nb, pattern="local_global", window_blocks=8, n_global=4)
+    kv_idx, counts = compile_mask(m)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append((f"sparsity/compile_mask/{nb}rows", round(us, 1),
+                 round(mask_density(kv_idx, counts), 4)))
+
+    # bitmap-index query throughput
+    from repro.data import BitmapIndex, SyntheticCorpus
+    corpus = SyntheticCorpus(n_docs=100_000 if quick else 500_000, vocab=1000,
+                             seed=1)
+    idx = BitmapIndex(corpus)
+    t0 = time.perf_counter()
+    sel = idx.query("lang=1|lang=2&quality>=2&!dedup_dup")
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append((f"data/bitmap_query/{corpus.n_docs}docs", round(us, 1),
+                 len(sel)))
+
+    # serving engine tokens/s (reduced model, CPU)
+    if not quick:
+        from repro.configs import get_config
+        from repro.models import transformer as T
+        from repro.serve import Request, ServeEngine
+        cfg = get_config("stablelm-1.6b", reduced=True)
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, max_batch=2, n_pages=128, page_size=8,
+                          max_pages_per_seq=16)
+        reqs = [Request(req_id=i, prompt=np.asarray([3, 5, 7]),
+                        max_new_tokens=8) for i in range(4)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_until_done()
+        dt = time.perf_counter() - t0
+        ntok = sum(len(r.generated) for r in reqs)
+        rows.append(("serve/paged_decode_tokens", round(dt * 1e6, 1),
+                     round(ntok / dt, 2)))
+    return rows

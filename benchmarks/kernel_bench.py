@@ -1,0 +1,63 @@
+"""Kernel-layer benchmarks: pallas (interpret) correctness-at-scale + the
+XLA reference path throughput on CPU (wall numbers are CPU-only indicative;
+the TPU story is the dry-run roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, repeats=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def run(quick: bool = False):
+    rows = []
+    from repro.core import jax_roaring as jr
+    from repro.kernels.roaring import ref as kr_ref
+
+    # batched container op (XLA ref path, jitted)
+    rng = np.random.default_rng(0)
+    for C in ([8] if quick else [8, 64]):
+        a = jnp.asarray(rng.integers(0, 1 << 16, (C, 4096)), jnp.uint16)
+        b = jnp.asarray(rng.integers(0, 1 << 16, (C, 4096)), jnp.uint16)
+        kinds = jnp.asarray([2] * (2 * C), jnp.int32)
+        f = jax.jit(lambda a, b: kr_ref.container_op_ref(a, b, kinds, "or"))
+        us = _t(lambda: f(a, b))
+        # fused op+popcount processes C*8kB with one pass
+        rows.append((f"kernels/container_or_popcount/C={C}", round(us, 1),
+                     round(C * 8192 / max(us, 1e-9), 1)))  # bytes/us
+
+    # slab set ops end to end
+    from repro.core.jax_roaring import from_dense_array, slab_and
+    va = np.unique(rng.integers(0, 1 << 19, 30000))
+    vb = np.unique(rng.integers(0, 1 << 19, 30000))
+    sa = from_dense_array(va, 16, 1 << 15)
+    sb = from_dense_array(vb, 16, 1 << 15)
+    f = jax.jit(lambda x, y: slab_and(x, y, capacity=16).cardinality)
+    us = _t(lambda: f(sa, sb))
+    rows.append(("kernels/slab_and_30k", round(us, 1), int(f(sa, sb))))
+
+    # sparse attention ref vs flash ref at 2k
+    from repro.models import attention as A
+    from repro.configs import get_config
+    cfg = get_config("stablelm-1.6b", reduced=True)
+    B, S, H, hd = 1, 2048, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    f = jax.jit(lambda q, k, v: A.flash_attn_jnp(q, k, v, cfg, causal=True))
+    us = _t(lambda: f(q, k, v))
+    flops = 4 * B * H * S * S / 2 * hd
+    rows.append(("kernels/flash_attn_2k", round(us, 1),
+                 round(flops / max(us, 1e-9) / 1e6, 2)))  # GFLOP/s
+
+    return rows

@@ -1,0 +1,79 @@
+"""Roofline report: artifacts/dryrun/*.json -> markdown tables + hillclimb
+cell selection.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str, mesh: str = "pod16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    if x >= 0.1:
+        return f"{x:.3f}"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}m"
+    return f"{x*1e6:.1f}u"
+
+
+def table(recs):
+    hdr = ("| cell | compute | memory | collective | dominant | useful "
+           "(6ND/analytic) | HLO flops raw | HBM GB/dev | temp GB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in recs:
+        rf = r["roofline"]
+        mem_gb = r["analytic"]["hbm_bytes"] / r["chips"] / 1e9
+        temp_gb = r["memory_analysis"]["temp_size_in_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant'].replace('_s','')} | {rf['useful_ratio']:.2f} | "
+            f"{r['cost_analysis']['flops']:.2e} | {mem_gb:.2f} | "
+            f"{temp_gb:.2f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs):
+    """Worst roofline fraction; most collective-bound; most paper-
+    representative (long-context decode = roaring paged/sequence machinery)."""
+    frac = [(r["roofline"]["roofline_fraction"], r["cell"]) for r in recs]
+    coll = [(r["roofline"]["collective_s"]
+             / max(sum([r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                        r["roofline"]["collective_s"]]), 1e-30), r["cell"])
+            for r in recs]
+    worst = min(frac)[1]
+    most_coll = max(coll)[1]
+    paper = [r["cell"] for r in recs
+             if r["shape"] == "long_500k" and "qwen2" in r["arch"]]
+    return worst, most_coll, (paper[0] if paper else recs[-1]["cell"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+    print(f"## Roofline ({args.mesh}, {len(recs)} cells)\n")
+    print(table(recs))
+    w, c, p = pick_hillclimb(recs)
+    print(f"\nhillclimb candidates: worst-fraction={w}  "
+          f"most-collective={c}  paper-representative={p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark orchestrator. One section per paper table/figure, plus kernel and
+roofline sections for the JAX framework layers.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes artifacts/bench.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced repeats")
+    ap.add_argument("--sections", default="all",
+                    help="comma list: fig2ab,fig2cd,fig2ef,tables,alg4,kernels,jax")
+    args = ap.parse_args()
+
+    from . import paper_figures as pf
+
+    sections = args.sections.split(",") if args.sections != "all" else [
+        "fig2ab", "fig2cd", "fig2ef", "tables", "alg4", "kernels", "jax"]
+    rows = []
+
+    def run(name, fn):
+        if name in sections:
+            print(f"# --- {name} ---", file=sys.stderr, flush=True)
+            rows.extend(fn())
+
+    r = 2 if args.quick else 3
+    run("fig2ab", lambda: pf.fig2ab_compression(repeats=r))
+    run("fig2cd", lambda: pf.fig2cd_ops(repeats=2 if args.quick else 5))
+    run("fig2cd", lambda: pf.fig2cd_streaming_crosscheck(repeats=r))
+    run("fig2ef", lambda: pf.fig2ef_append_remove(n_updates=100 if args.quick else 200))
+    run("tables", lambda: pf.tables_realdata(
+        n_bitmaps=30 if args.quick else 60, n_pairs=15 if args.quick else 30))
+    run("alg4", lambda: pf.alg4_many_way_union(repeats=r))
+
+    if "kernels" in sections:
+        try:
+            from . import kernel_bench
+            print("# --- kernels ---", file=sys.stderr, flush=True)
+            rows.extend(kernel_bench.run(quick=args.quick))
+        except ImportError:
+            print("# kernels section unavailable", file=sys.stderr)
+
+    if "jax" in sections:
+        try:
+            from . import jax_bench
+            print("# --- jax ---", file=sys.stderr, flush=True)
+            rows.extend(jax_bench.run(quick=args.quick))
+        except ImportError:
+            print("# jax section unavailable", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, t, d in rows:
+        print(f"{name},{t},{d}")
+
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/bench.json", "w") as f:
+        json.dump([{"name": n, "us_per_call": t, "derived": d}
+                   for n, t, d in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

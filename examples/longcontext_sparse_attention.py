@@ -1,0 +1,59 @@
+"""Roaring-driven block-sparse attention: mask algebra -> kernel metadata ->
+attention output, verified against the dense oracle.
+
+Shows the paper's structures doing framework work: the attention mask for a
+long-context layer is built with Roaring unions (local window | global
+stripes | doc-boundary), compiled to packed block lists (Algorithm 2
+extraction), and consumed by the splash-style kernel in interpret mode.
+
+    PYTHONPATH=src python examples/longcontext_sparse_attention.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sparse_attn import kernel as K
+from repro.kernels.sparse_attn import ref as R
+from repro.sparsity import (MaskBuilder, build_arch_mask, compile_mask,
+                            doc_boundary_mask, mask_density)
+
+
+def main():
+    S, block = 2048, 128
+    nb = S // block
+
+    # 1) mask algebra with roaring bitmaps
+    base = build_arch_mask(nb, pattern="local_global", window_blocks=4,
+                           n_global=2)
+    docs = MaskBuilder(doc_boundary_mask(nb, doc_starts_blocks=[6, 11]))
+    mask = base.intersect(docs)            # confine attention within docs
+    kv_idx, counts = compile_mask(mask)
+    print(f"{nb}x{nb} block mask: density {mask_density(kv_idx, counts):.3f} "
+          f"(dense causal would be {(nb+1)/(2*nb):.3f})")
+    print(f"roaring mask footprint: {mask.size_in_bytes()} bytes vs "
+          f"{nb * nb // 8} bytes for a dense block-bool matrix")
+
+    # 2) attention through the block lists (interpret-mode pallas kernel)
+    rng = np.random.default_rng(0)
+    B, H, D = 1, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    out_kernel = K.sparse_flash_attention(
+        q, k, v, jnp.asarray(kv_idx), jnp.asarray(counts),
+        block_q=block, block_kv=block, causal=True, interpret=True)
+    out_ref = R.sparse_attention_ref(
+        q, k, v, jnp.asarray(kv_idx), jnp.asarray(counts),
+        block_q=block, block_kv=block, causal=True)
+    err = float(jnp.max(jnp.abs(out_kernel - out_ref)))
+    print(f"kernel vs dense-masked oracle: max |err| = {err:.2e}")
+    assert err < 2e-5
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

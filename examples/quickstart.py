@@ -1,0 +1,56 @@
+"""Quickstart: the Roaring bitmap core, the paper's claims in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.baselines import BitSet, ConciseBitmap, WahBitmap
+from repro.core import RoaringBitmap, union_many
+
+
+def main():
+    # --- the paper's S1 example: {0, 62, 124, ...} --------------------------
+    vals = np.arange(0, 62 * 10000, 62, dtype=np.int64)
+    roar = RoaringBitmap.from_sorted_unique(vals)
+    wah = WahBitmap.from_sorted_unique(vals)
+    con = ConciseBitmap.from_sorted_unique(vals)
+    bits = lambda o: o.size_in_bytes() * 8 / vals.size
+    print("bits/integer on {0, 62, 124, ...}:")
+    print(f"  roaring {bits(roar):6.1f}   (paper: ~16)")
+    print(f"  concise {bits(con):6.1f}   (paper: 32)")
+    print(f"  wah     {bits(wah):6.1f}   (paper: 64)")
+
+    # --- hybrid containers -----------------------------------------------------
+    rb = RoaringBitmap.from_array(
+        list(range(0, 62_000, 62))                 # sparse chunk -> array
+        + list(range(1 << 16, (1 << 16) + 100))    # small chunk  -> array
+        + list(range(2 << 16, 3 << 16, 2)))        # dense chunk  -> bitmap
+    na, nb = rb.container_stats()
+    print(f"\nfig-1 bitmap: {na} array + {nb} bitmap containers, "
+          f"cardinality {len(rb)} (counter sum)")
+
+    # --- set algebra vs python sets ---------------------------------------------
+    rng = np.random.default_rng(0)
+    a = np.unique(rng.integers(0, 1 << 20, 50_000))
+    b = np.unique(rng.integers(0, 1 << 20, 80_000))
+    ra, rb2 = RoaringBitmap.from_sorted_unique(a), RoaringBitmap.from_sorted_unique(b)
+    sa, sb = set(a.tolist()), set(b.tolist())
+    assert set((ra & rb2).to_array().tolist()) == sa & sb
+    assert set((ra | rb2).to_array().tolist()) == sa | sb
+    print("\nAND/OR verified against python set algebra "
+          f"(|A|={len(sa)}, |B|={len(sb)}, |A&B|={len(sa & sb)})")
+
+    # --- Algorithm 4: many-way union ----------------------------------------------
+    parts = [RoaringBitmap.from_sorted_unique(
+        np.unique(rng.integers(0, 1 << 20, 20_000))) for _ in range(32)]
+    u = union_many(parts)
+    print(f"alg-4 union of 32 bitmaps: cardinality {len(u)}, "
+          f"{u.size_in_bytes()/1024:.0f} kB")
+
+    # --- rank/select ---------------------------------------------------------------
+    print(f"rank(500000) = {ra.rank(500_000)}, select(1000) = {ra.select(1000)}")
+
+
+if __name__ == "__main__":
+    main()

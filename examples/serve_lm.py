@@ -1,0 +1,51 @@
+"""End-to-end serving: batched requests, continuous batching, roaring-paged
+KV cache (the paper's structure as the page allocator + per-seq page sets).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import Request, ServeEngine
+
+
+def main():
+    cfg = get_config("stablelm-1.6b", reduced=True)
+    rng = jax.random.PRNGKey(0)
+    params = T.init_lm(rng, cfg)
+    eng = ServeEngine(cfg, params, max_batch=4, n_pages=256, page_size=8,
+                      max_pages_per_seq=32)
+
+    rnp = np.random.default_rng(0)
+    reqs = [Request(req_id=i,
+                    prompt=rnp.integers(1, cfg.vocab, int(rnp.integers(3, 10))),
+                    max_new_tokens=int(rnp.integers(4, 12)))
+            for i in range(10)]
+    t0 = time.time()
+    for r in reqs:
+        eng.submit(r)
+    peak = 0.0
+    while eng.queue or eng.active:
+        eng.step()
+        peak = max(peak, eng.utilization())
+    dt = time.time() - t0
+    n_tok = sum(len(r.generated) for r in reqs)
+    print(f"served {len(reqs)} requests / {n_tok} new tokens in {dt:.1f}s")
+    print(f"peak page-pool utilization {peak:.1%}; all pages reclaimed: "
+          f"{eng.utilization() == 0.0} (roaring OR back into the free set)")
+    for r in reqs[:4]:
+        print(f"  req {r.req_id}: {list(r.prompt)} -> {r.generated}")
+    assert all(r.done for r in reqs)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

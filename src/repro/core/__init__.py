@@ -1,0 +1,14 @@
+"""Core Roaring bitmap implementations (the paper's primary contribution).
+
+- ``py_roaring``: paper-faithful CPU implementation (Algorithms 1-4).
+- ``jax_roaring``: TPU-native static-shape container slab for use inside
+  jit/pjit programs (masks, page tables, gradient index sets).
+"""
+
+from .py_roaring import (RoaringBitmap, ArrayContainer, BitmapContainer,
+                         union_many, ARRAY_MAX, CHUNK_SIZE)
+
+__all__ = [
+    "RoaringBitmap", "ArrayContainer", "BitmapContainer", "union_many",
+    "ARRAY_MAX", "CHUNK_SIZE",
+]

@@ -1,0 +1,377 @@
+"""TPU-native Roaring bitmap: the static-shape container slab.
+
+The paper's dynamic two-level structure is re-thought for accelerator
+execution (static shapes, no pointer chasing):
+
+  * a ``RoaringSlab`` holds up to ``C`` containers. Row ``i`` of ``data``
+    (u16[4096], 8 kB) is *either* a packed sorted u16 array (first ``card[i]``
+    entries) *or* a 2^16-bit bitmap stored as 4096 16-bit words. The paper's
+    4096-element threshold is exactly the break-even where both forms cost
+    8 kB, so a uniform slab row wastes nothing at the boundary.
+  * ``keys`` is the sorted first-level index (padded with ``KEY_SENTINEL``),
+    ``card`` the per-container cardinality counters (paper S2), ``kind`` the
+    container type tag (0 empty / 1 array / 2 bitmap).
+
+XLA-path set operations run in *bitmap domain* (uniform, maskable); the
+paper's hybrid per-type dispatch — which skips work instead of masking it —
+lives in the Pallas kernels (``repro.kernels.roaring``), where ``@pl.when``
+on container-type tags skips whole 8 kB tiles. Cardinality is maintained with
+``lax.population_count`` (the popcnt the paper leans on) fused into the same
+pass, mirroring Algorithm 1/3.
+
+All functions are jit-/vmap-/pjit-compatible and allocation-free at trace
+time; capacities are static Python ints.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHUNK_BITS = 16
+CHUNK_SIZE = 1 << CHUNK_BITS
+ARRAY_MAX = 4096                 # paper's array/bitmap threshold
+ROW_WORDS = 4096                 # 4096 x u16 words = 2^16 bits = 8 kB
+KEY_SENTINEL = jnp.int32(1 << 20)
+
+KIND_EMPTY, KIND_ARRAY, KIND_BITMAP = 0, 1, 2
+
+
+class RoaringSlab(NamedTuple):
+    """Static-capacity Roaring bitmap. ``C = keys.shape[0]`` containers."""
+
+    keys: jax.Array   # i32[C], sorted, inactive rows = KEY_SENTINEL
+    card: jax.Array   # i32[C]
+    kind: jax.Array   # i32[C] in {0,1,2}
+    data: jax.Array   # u16[C, 4096]
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def n_containers(self) -> jax.Array:
+        return jnp.sum(self.kind != KIND_EMPTY)
+
+    @property
+    def cardinality(self) -> jax.Array:
+        """Sum of per-container counters (paper S2)."""
+        return jnp.sum(self.card)
+
+
+def empty(capacity: int) -> RoaringSlab:
+    return RoaringSlab(
+        keys=jnp.full((capacity,), KEY_SENTINEL, dtype=jnp.int32),
+        card=jnp.zeros((capacity,), dtype=jnp.int32),
+        kind=jnp.zeros((capacity,), dtype=jnp.int32),
+        data=jnp.zeros((capacity, ROW_WORDS), dtype=jnp.uint16),
+    )
+
+
+# =============================================================================
+# row-level helpers (one container)
+# =============================================================================
+
+def row_array_to_bits(row: jax.Array, card: jax.Array) -> jax.Array:
+    """Packed sorted u16 array row -> 4096-word bitmap row.
+
+    Distinct elements set distinct bits, so a scatter-add is an exact OR.
+    """
+    lo = row.astype(jnp.int32)
+    valid = jnp.arange(row.shape[0]) < card
+    word = jnp.where(valid, lo >> 4, ROW_WORDS)           # OOB index dropped
+    bit = (lo & 15).astype(jnp.uint16)
+    vals = jnp.where(valid, jnp.uint16(1) << bit, jnp.uint16(0))
+    return jnp.zeros((ROW_WORDS,), jnp.uint16).at[word].add(
+        vals, mode="drop")
+
+
+def row_to_bits(row: jax.Array, card: jax.Array, kind: jax.Array) -> jax.Array:
+    """Uniform bitmap-domain view of a container row (empty -> zeros)."""
+    as_bits = row_array_to_bits(row, card)
+    return jnp.where(kind == KIND_BITMAP, row, as_bits) * (kind != KIND_EMPTY).astype(jnp.uint16)
+
+
+def row_popcount(bits: jax.Array) -> jax.Array:
+    """Container cardinality via popcnt (paper Alg. 1 line 7)."""
+    return jnp.sum(lax_popcount(bits).astype(jnp.int32))
+
+
+def lax_popcount(x: jax.Array) -> jax.Array:
+    return jax.lax.population_count(x)
+
+
+def row_bits_to_array(bits: jax.Array) -> jax.Array:
+    """Vectorized Algorithm 2: bitmap row -> packed sorted u16 array row.
+
+    Per-word popcounts -> exclusive cumsum gives each word's write offset;
+    bit positions are scattered to offset + rank-within-word. O(2^16) fully
+    data-parallel (the TPU replacement for the serial ``w & -w`` loop).
+    """
+    # bits: u16[4096] -> per-bit boolean [4096, 16]
+    shifts = jnp.arange(16, dtype=jnp.uint16)
+    bitmat = ((bits[:, None] >> shifts[None, :]) & jnp.uint16(1)).astype(jnp.int32)
+    flat = bitmat.reshape(-1)                               # [65536] in value order
+    pos = jnp.arange(CHUNK_SIZE, dtype=jnp.int32)
+    rank = jnp.cumsum(flat) - flat                          # exclusive cumsum
+    idx = jnp.where(flat == 1, rank, CHUNK_SIZE)            # OOB dropped
+    out = jnp.zeros((ROW_WORDS,), jnp.uint16).at[idx].add(
+        pos.astype(jnp.uint16), mode="drop")
+    return out
+
+
+def row_canonicalize(bits: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """bitmap-domain row -> canonical (data, card, kind) per the 4096 rule.
+
+    Array rows are padded with 0xFFFF past ``card`` so the packed prefix plus
+    padding stays globally sorted (binary-search friendly).
+    """
+    card = row_popcount(bits)
+    as_array = row_bits_to_array(bits)
+    as_array = jnp.where(jnp.arange(ROW_WORDS) < card, as_array,
+                         jnp.uint16(0xFFFF))
+    is_bitmap = card > ARRAY_MAX
+    data = jnp.where(is_bitmap, bits, as_array)
+    kind = jnp.where(card == 0, KIND_EMPTY,
+                     jnp.where(is_bitmap, KIND_BITMAP, KIND_ARRAY))
+    return data, card, kind
+
+
+# =============================================================================
+# construction / export
+# =============================================================================
+
+def from_indices(idx: jax.Array, valid: jax.Array, capacity: int) -> RoaringSlab:
+    """Build a slab from (padded) *sorted unique* int32/int64 indices.
+
+    ``idx``: i64/i32[M] sorted ascending with invalid entries at the end
+    (``valid`` false). Elements sharing high 16 bits land in one container.
+    Works with or without x64 (int32 universes cover every in-framework use:
+    per-leaf gradient coordinates, block ids, page ids).
+    """
+    idt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    idx = idx.astype(idt)
+    M = idx.shape[0]
+    sentinel = jnp.asarray(int(KEY_SENTINEL), idt)
+    hi = jnp.where(valid, idx >> CHUNK_BITS, sentinel)
+    lo = (idx & (CHUNK_SIZE - 1)).astype(jnp.int32)
+
+    first = jnp.concatenate([jnp.array([True]), hi[1:] != hi[:-1]]) & valid
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1           # container id per elem
+    seg = jnp.where(valid, seg, capacity)                   # drop invalid
+    counts = jnp.zeros((capacity,), jnp.int32).at[seg].add(1, mode="drop")
+
+    # container keys: first element of each segment
+    keys = jnp.full((capacity,), sentinel, dtype=idt)
+    keys = keys.at[jnp.where(first, seg, capacity)].min(
+        jnp.where(first, hi, sentinel), mode="drop")
+    keys = jnp.where(counts > 0, keys, sentinel).astype(jnp.int32)
+
+    # array representation: rank within segment
+    seg_start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                 jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    rank = jnp.arange(M, dtype=jnp.int32) - seg_start[jnp.minimum(seg, capacity - 1)]
+    arr_data = jnp.zeros((capacity, ROW_WORDS), jnp.uint16)
+    arr_data = arr_data.at[seg, jnp.where(valid, rank, ROW_WORDS)].add(
+        lo.astype(jnp.uint16), mode="drop")
+
+    # bitmap representation (scatter-add of distinct power-of-two bits)
+    bit_data = jnp.zeros((capacity, ROW_WORDS), jnp.uint16)
+    bit_data = bit_data.at[seg, jnp.where(valid, lo >> 4, ROW_WORDS)].add(
+        jnp.where(valid, jnp.uint16(1) << (lo & 15).astype(jnp.uint16),
+                  jnp.uint16(0)), mode="drop")
+
+    is_bitmap = counts > ARRAY_MAX
+    # pad array rows with 0xFFFF past card so binary search stays valid
+    arr_data = jnp.where(jnp.arange(ROW_WORDS)[None, :] < counts[:, None],
+                         arr_data, jnp.uint16(0xFFFF))
+    data = jnp.where(is_bitmap[:, None], bit_data, arr_data)
+    kind = jnp.where(counts == 0, KIND_EMPTY,
+                     jnp.where(is_bitmap, KIND_BITMAP, KIND_ARRAY))
+    return RoaringSlab(keys=keys, card=counts, kind=kind, data=data)
+
+
+def from_dense_array(values: np.ndarray, capacity: int, max_elems: int) -> RoaringSlab:
+    """Host-side convenience: numpy values -> slab (pads to max_elems)."""
+    v = np.unique(np.asarray(values, dtype=np.int64))
+    assert v.size <= max_elems, (v.size, max_elems)
+    idx = np.full((max_elems,), 0, dtype=np.int64)
+    idx[: v.size] = v
+    valid = np.zeros((max_elems,), dtype=bool)
+    valid[: v.size] = True
+    # keep padded tail sorted-after-valid by setting it to the max value
+    if v.size:
+        idx[v.size:] = v[-1]
+    return from_indices(jnp.asarray(idx), jnp.asarray(valid), capacity)
+
+
+def to_indices(slab: RoaringSlab, max_out: int) -> tuple[jax.Array, jax.Array]:
+    """Slab -> (sorted values int[max_out], valid bool[max_out]).
+
+    Uniform path: every row is viewed in bitmap domain, all C*2^16 candidate
+    bits are compacted by exclusive cumsum (global Algorithm 2).
+    """
+    idt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    bits = jax.vmap(row_to_bits)(slab.data, slab.card, slab.kind)   # u16[C,4096]
+    shifts = jnp.arange(16, dtype=jnp.uint16)
+    bitmat = ((bits[:, :, None] >> shifts[None, None, :]) & jnp.uint16(1))
+    flat = bitmat.reshape(-1).astype(jnp.int32)             # [C*65536]
+    # sentinel keys may wrap when shifted in int32 — harmless: their rows have
+    # flat == 0 everywhere, so the wrapped values are multiplied away.
+    base = (slab.keys.astype(idt) << CHUNK_BITS)
+    vals = (base[:, None] + jnp.arange(CHUNK_SIZE, dtype=idt)[None, :]).reshape(-1)
+    rank = jnp.cumsum(flat) - flat
+    tgt = jnp.where(flat == 1, rank, max_out)
+    out = jnp.zeros((max_out,), idt).at[tgt].add(vals * flat, mode="drop")
+    total = jnp.sum(flat)
+    valid = jnp.arange(max_out) < total
+    return jnp.where(valid, out, 0), valid
+
+
+def extract_row(slab: RoaringSlab, r, max_out: int = ARRAY_MAX):
+    """Packed sorted values of container ``r`` (Alg. 2 on one row)."""
+    bits = row_to_bits(slab.data[r], slab.card[r], slab.kind[r])
+    arr = row_bits_to_array(bits)
+    valid = jnp.arange(ROW_WORDS) < slab.card[r]
+    return arr[:max_out], valid[:max_out]
+
+
+# =============================================================================
+# membership / rank
+# =============================================================================
+
+def contains(slab: RoaringSlab, queries: jax.Array) -> jax.Array:
+    """Batched membership test (paper S3): first-level binary search, then
+    array binary search or bitmap bit probe, selected by container kind."""
+    q = queries.astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
+    hi = (q >> CHUNK_BITS).astype(jnp.int32)
+    lo = (q & (CHUNK_SIZE - 1)).astype(jnp.int32)
+    row = jnp.searchsorted(slab.keys, hi)
+    row_c = jnp.minimum(row, slab.capacity - 1)
+    key_hit = slab.keys[row_c] == hi
+
+    def one(row_i, lo_i):
+        data = slab.data[row_i]
+        card = slab.card[row_i]
+        kind = slab.kind[row_i]
+        # array path: binary search in packed sorted prefix
+        pos = jnp.searchsorted(data, lo_i.astype(jnp.uint16))
+        arr_hit = (pos < card) & (data[jnp.minimum(pos, ROW_WORDS - 1)]
+                                  == lo_i.astype(jnp.uint16))
+        # bitmap path: probe bit
+        word = data[lo_i >> 4]
+        bit_hit = ((word >> (lo_i & 15).astype(jnp.uint16)) & jnp.uint16(1)) == 1
+        return jnp.where(kind == KIND_BITMAP, bit_hit,
+                         jnp.where(kind == KIND_ARRAY, arr_hit, False))
+
+    hits = jax.vmap(one)(row_c, lo)
+    return hits & key_hit
+
+
+def rank(slab: RoaringSlab, x: jax.Array) -> jax.Array:
+    """# elements <= x: whole-container counters + one partial container."""
+    x = x.astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
+    hi = (x >> CHUNK_BITS).astype(jnp.int32)
+    lo = (x & (CHUNK_SIZE - 1)).astype(jnp.int32)
+    full = jnp.sum(jnp.where(slab.keys < hi, slab.card, 0))
+    row = jnp.searchsorted(slab.keys, hi)
+    row_c = jnp.minimum(row, slab.capacity - 1)
+    hit = slab.keys[row_c] == hi
+    bits = row_to_bits(slab.data[row_c], slab.card[row_c], slab.kind[row_c])
+    word_idx = lo >> 4
+    mask_full = (jnp.arange(ROW_WORDS) < word_idx)
+    partial_words = jnp.sum(lax_popcount(jnp.where(mask_full, bits, 0)).astype(jnp.int32))
+    last = bits[word_idx] & ((jnp.uint16(2) << (lo & 15).astype(jnp.uint16)) - 1).astype(jnp.uint16)
+    in_row = partial_words + lax_popcount(last).astype(jnp.int32)
+    return full + jnp.where(hit, in_row, 0)
+
+
+# =============================================================================
+# set algebra (XLA bitmap-domain path; hybrid dispatch is in the Pallas kernel)
+# =============================================================================
+
+def _merge_keys(a: RoaringSlab, b: RoaringSlab, capacity: int) -> jax.Array:
+    """Union of the two sorted key sets, deduplicated, padded with sentinel."""
+    cat = jnp.concatenate([a.keys, b.keys])
+    srt = jnp.sort(cat)
+    dup = jnp.concatenate([jnp.array([False]), srt[1:] == srt[:-1]])
+    vals = jnp.where(dup, KEY_SENTINEL, srt)
+    vals = jnp.sort(vals)
+    return vals[:capacity]
+
+
+def _gather_rows(s: RoaringSlab, keys: jax.Array):
+    """Bitmap-domain rows of ``s`` aligned to ``keys`` (zeros when absent)."""
+    pos = jnp.searchsorted(s.keys, keys)
+    pos_c = jnp.minimum(pos, s.capacity - 1)
+    present = (s.keys[pos_c] == keys) & (keys != KEY_SENTINEL)
+    bits = jax.vmap(row_to_bits)(s.data[pos_c], s.card[pos_c], s.kind[pos_c])
+    return bits * present[:, None].astype(jnp.uint16), present
+
+
+def _binary_bits_op(a: RoaringSlab, b: RoaringSlab, word_op, capacity: int,
+                    intersection: bool) -> RoaringSlab:
+    if capacity is None:
+        capacity = a.capacity + b.capacity
+    keys = _merge_keys(a, b, capacity)
+    bits_a, pa = _gather_rows(a, keys)
+    bits_b, pb = _gather_rows(b, keys)
+    out_bits = word_op(bits_a, bits_b)
+    data, card, kind = jax.vmap(row_canonicalize)(out_bits)
+    live = card > 0
+    if intersection:
+        live = live & pa & pb
+        card = jnp.where(live, card, 0)
+        kind = jnp.where(live, kind, KIND_EMPTY)
+    keys = jnp.where(live, keys, KEY_SENTINEL)
+    # compact: sort rows so live keys are sorted first (sentinel rows sink)
+    order = jnp.argsort(keys)
+    return RoaringSlab(keys=keys[order], card=card[order], kind=kind[order],
+                       data=data[order])
+
+
+def slab_and(a: RoaringSlab, b: RoaringSlab, capacity: int | None = None) -> RoaringSlab:
+    return _binary_bits_op(a, b, jnp.bitwise_and,
+                           capacity or min(a.capacity, b.capacity) * 2,
+                           intersection=True)
+
+
+def slab_or(a: RoaringSlab, b: RoaringSlab, capacity: int | None = None) -> RoaringSlab:
+    return _binary_bits_op(a, b, jnp.bitwise_or,
+                           capacity or (a.capacity + b.capacity),
+                           intersection=False)
+
+
+def slab_xor(a: RoaringSlab, b: RoaringSlab, capacity: int | None = None) -> RoaringSlab:
+    return _binary_bits_op(a, b, jnp.bitwise_xor,
+                           capacity or (a.capacity + b.capacity),
+                           intersection=False)
+
+
+def slab_andnot(a: RoaringSlab, b: RoaringSlab, capacity: int | None = None) -> RoaringSlab:
+    out = _binary_bits_op(a, b, lambda x, y: jnp.bitwise_and(x, ~y),
+                          capacity or a.capacity, intersection=False)
+    # keys only present in A survive; rows from B alone are already zeroed by
+    # the AND-NOT word op (x=0 there), and canonicalize marks them empty.
+    return out
+
+
+def union_many_slabs(slabs: list[RoaringSlab], capacity: int) -> RoaringSlab:
+    """Algorithm 4, TPU form: key-aligned segmented OR-reduction in bitmap
+    domain with cardinality computed once at the end (deferred popcount)."""
+    all_keys = jnp.concatenate([s.keys for s in slabs])
+    srt = jnp.sort(all_keys)
+    dup = jnp.concatenate([jnp.array([False]), srt[1:] == srt[:-1]])
+    keys = jnp.sort(jnp.where(dup, KEY_SENTINEL, srt))[:capacity]
+    acc = jnp.zeros((capacity, ROW_WORDS), jnp.uint16)
+    for s in slabs:                                   # static unroll (fleet size)
+        bits, _ = _gather_rows(s, keys)
+        acc = jnp.bitwise_or(acc, bits)               # deferred cardinality
+    data, card, kind = jax.vmap(row_canonicalize)(acc)
+    keys = jnp.where(card > 0, keys, KEY_SENTINEL)
+    order = jnp.argsort(keys)
+    return RoaringSlab(keys[order], card[order], kind[order], data[order])

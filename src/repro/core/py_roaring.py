@@ -1,0 +1,662 @@
+"""Paper-faithful Roaring bitmap (Chambi, Lemire, Kaser, Godin 2014).
+
+This module is the *reproduction floor*: a CPU implementation that follows the
+paper's data layout and Algorithms 1-4 exactly:
+
+  * two-level index: sorted 16-bit keys -> containers of the low 16 bits;
+  * array containers (sorted packed u16, card <= 4096) vs bitmap containers
+    (2^16-bit bitmap as 1024 x u64, card > 4096);
+  * per-container cardinality counters;
+  * hybrid AND/OR per container-type pair, including the cardinality-first
+    bitmap AND (Alg. 3), fused popcount union (Alg. 1), galloping array
+    intersection with the 64x ratio rule, and the union-through-bitmap rule;
+  * Alg. 2 set-bit extraction (both the faithful ``w & -w`` loop and a
+    vectorized equivalent);
+  * Alg. 4 many-way union with a key min-heap and deferred cardinality.
+
+NumPy stands in for 64-bit words + popcnt (``np.bitwise_count``), mirroring
+how the paper's Java implementation leans on ``Long.bitCount``.
+
+The TPU-native static-shape port lives in ``jax_roaring.py``; kernels in
+``repro.kernels.roaring``.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+# --- constants from the paper ------------------------------------------------
+CHUNK_BITS = 16
+CHUNK_SIZE = 1 << CHUNK_BITS              # 2^16 integers per chunk
+ARRAY_MAX = 4096                          # array container max cardinality
+BITMAP_WORDS = CHUNK_SIZE // 64           # 1024 x u64 words per bitmap container
+GALLOP_RATIO = 64                         # merge vs galloping threshold (S4)
+
+_U16 = np.uint16
+_U64 = np.uint64
+
+
+# =============================================================================
+# Word-level primitives (Algorithm 2 and friends)
+# =============================================================================
+
+def popcount_words(words: np.ndarray) -> int:
+    """Hamming weight of a word array — the paper's popcnt/Long.bitCount."""
+    return int(np.bitwise_count(words).sum())
+
+
+def extract_set_bits_faithful(w: int, base: int, out: List[int]) -> None:
+    """Algorithm 2, verbatim: emit positions of set bits in one 64-bit word.
+
+    Uses two's-complement tricks ``t = w & -w`` (isolate lowest bit) and
+    ``w &= w - 1`` (clear lowest bit); cf. Warren, Hacker's Delight.
+    """
+    w &= (1 << 64) - 1
+    while w != 0:
+        t = w & (-w & ((1 << 64) - 1))
+        out.append(base + int(t - 1).bit_count())
+        w &= w - 1
+
+
+def bitmap_to_array_faithful(words: np.ndarray) -> np.ndarray:
+    """Convert bitmap words to a sorted u16 array via Algorithm 2 (loop form)."""
+    out: List[int] = []
+    for i, w in enumerate(words.tolist()):
+        if w:
+            extract_set_bits_faithful(int(w), i * 64, out)
+    return np.asarray(out, dtype=_U16)
+
+
+def bitmap_to_array(words: np.ndarray) -> np.ndarray:
+    """Vectorized Algorithm 2: positions of all set bits, ascending.
+
+    Equivalent output to the faithful loop; uses byte unpacking + nonzero,
+    which is the numpy analogue of extracting with popcount offsets.
+    """
+    bits = np.unpackbits(words.view(np.uint8), bitorder="little")
+    return np.nonzero(bits)[0].astype(_U16)
+
+
+def array_to_bitmap(arr: np.ndarray) -> np.ndarray:
+    """Set the bits of a sorted u16 array in a fresh 1024-word bitmap."""
+    words = np.zeros(BITMAP_WORDS, dtype=_U64)
+    a = arr.astype(np.int64)
+    np.bitwise_or.at(words, a >> 6, (_U64(1) << (a & 63).astype(_U64)))
+    return words
+
+
+# =============================================================================
+# Containers
+# =============================================================================
+
+class ArrayContainer:
+    """Sorted packed array of 16-bit integers, cardinality <= 4096."""
+
+    __slots__ = ("arr",)
+
+    def __init__(self, arr: Optional[np.ndarray] = None):
+        self.arr = (
+            np.empty(0, dtype=_U16) if arr is None else np.asarray(arr, dtype=_U16)
+        )
+
+    @property
+    def cardinality(self) -> int:
+        return int(self.arr.size)
+
+    def size_in_bytes(self) -> int:
+        return 2 * self.arr.size  # 16 bits per integer
+
+    def contains(self, x: int) -> bool:
+        i = int(np.searchsorted(self.arr, _U16(x)))
+        return i < self.arr.size and int(self.arr[i]) == x
+
+    def clone(self) -> "ArrayContainer":
+        return ArrayContainer(self.arr.copy())
+
+    def add(self, x: int) -> "Container":
+        """Binary search + linear-time insertion; convert at >4096 (S3)."""
+        i = int(np.searchsorted(self.arr, _U16(x)))
+        if i < self.arr.size and int(self.arr[i]) == x:
+            return self
+        self.arr = np.insert(self.arr, i, _U16(x))
+        if self.arr.size > ARRAY_MAX:
+            return BitmapContainer(array_to_bitmap(self.arr), self.arr.size)
+        return self
+
+    def remove(self, x: int) -> "Container":
+        i = int(np.searchsorted(self.arr, _U16(x)))
+        if i < self.arr.size and int(self.arr[i]) == x:
+            self.arr = np.delete(self.arr, i)
+        return self
+
+    def to_array(self) -> np.ndarray:
+        return self.arr
+
+    def iter_values(self) -> Iterator[int]:
+        return iter(self.arr.tolist())
+
+
+class BitmapContainer:
+    """2^16-bit bitmap (1024 x u64) with a tracked cardinality counter."""
+
+    __slots__ = ("words", "cardinality")
+
+    def __init__(self, words: Optional[np.ndarray] = None, cardinality: int = -1):
+        self.words = (
+            np.zeros(BITMAP_WORDS, dtype=_U64)
+            if words is None
+            else np.asarray(words, dtype=_U64)
+        )
+        self.cardinality = (
+            popcount_words(self.words) if cardinality < 0 else int(cardinality)
+        )
+
+    def size_in_bytes(self) -> int:
+        return 8 * BITMAP_WORDS  # always 8 kB
+
+    def contains(self, x: int) -> bool:
+        return bool((int(self.words[x >> 6]) >> (x & 63)) & 1)
+
+    def clone(self) -> "BitmapContainer":
+        return BitmapContainer(self.words.copy(), self.cardinality)
+
+    def add(self, x: int) -> "Container":
+        w = int(self.words[x >> 6])
+        bit = 1 << (x & 63)
+        if not (w & bit):
+            self.words[x >> 6] = _U64(w | bit)
+            self.cardinality += 1
+        return self
+
+    def remove(self, x: int) -> "Container":
+        """Clear a bit; convert to array when cardinality reaches 4096 (S3)."""
+        w = int(self.words[x >> 6])
+        bit = 1 << (x & 63)
+        if w & bit:
+            self.words[x >> 6] = _U64(w & ~bit)
+            self.cardinality -= 1
+            if self.cardinality <= ARRAY_MAX:
+                return ArrayContainer(bitmap_to_array(self.words))
+        return self
+
+    def to_array(self) -> np.ndarray:
+        return bitmap_to_array(self.words)
+
+    def iter_values(self) -> Iterator[int]:
+        return iter(self.to_array().tolist())
+
+
+Container = Union[ArrayContainer, BitmapContainer]
+
+
+def _maybe_to_array(c: BitmapContainer) -> Container:
+    if c.cardinality <= ARRAY_MAX:
+        return ArrayContainer(bitmap_to_array(c.words))
+    return c
+
+
+# =============================================================================
+# Container-pair logical operations (paper S4)
+# =============================================================================
+
+def union_bitmap_bitmap(a: BitmapContainer, b: BitmapContainer) -> BitmapContainer:
+    """Algorithm 1: 1024 ORs with fused popcount; result stays a bitmap
+    (cardinality >= max(|A|,|B|) > 4096)."""
+    words = np.bitwise_or(a.words, b.words)
+    return BitmapContainer(words, popcount_words(words))
+
+
+def union_bitmap_bitmap_inplace(a: BitmapContainer, b: BitmapContainer) -> BitmapContainer:
+    """In-place variant (S4): overwrite A, skip cardinality until asked."""
+    np.bitwise_or(a.words, b.words, out=a.words)
+    a.cardinality = popcount_words(a.words)
+    return a
+
+
+def intersect_bitmap_bitmap(a: BitmapContainer, b: BitmapContainer) -> Container:
+    """Algorithm 3: compute cardinality first with 1024 ANDs + popcount, then
+    materialize a bitmap (card > 4096) or extract an array (Alg. 2)."""
+    anded = np.bitwise_and(a.words, b.words)
+    c = popcount_words(anded)
+    if c > ARRAY_MAX:
+        return BitmapContainer(anded, c)
+    return ArrayContainer(bitmap_to_array(anded))
+
+
+def union_array_bitmap(a: ArrayContainer, b: BitmapContainer) -> BitmapContainer:
+    """Clone the bitmap and set the array's bits (S4 Bitmap vs Array)."""
+    out = b.clone()
+    idx = a.arr.astype(np.int64)
+    words = out.words
+    # cardinality update by counting newly-set bits (paper: check whether the
+    # word value was modified); array elements are unique, so the number of
+    # new bits is the number of elements not already present.
+    present = (words[idx >> 6] >> (idx & 63).astype(_U64)) & _U64(1)
+    np.bitwise_or.at(words, idx >> 6, (_U64(1) << (idx & 63).astype(_U64)))
+    out.cardinality = b.cardinality + int(idx.size - int(present.sum()))
+    return out
+
+
+def intersect_array_bitmap(a: ArrayContainer, b: BitmapContainer) -> ArrayContainer:
+    """Probe each array element against the bitmap (S4); output is an array
+    (cannot exceed |A| <= 4096)."""
+    idx = a.arr.astype(np.int64)
+    hits = (b.words[idx >> 6] >> (idx & 63).astype(_U64)) & _U64(1)
+    return ArrayContainer(a.arr[hits.astype(bool)])
+
+
+def _merge_intersect(small: np.ndarray, large: np.ndarray) -> np.ndarray:
+    """Vectorized sorted-merge intersection (the paper's merge path)."""
+    pos = np.searchsorted(large, small)
+    pos_clipped = np.minimum(pos, large.size - 1)
+    mask = (pos < large.size) & (large[pos_clipped] == small)
+    return small[mask]
+
+
+def galloping_intersect_faithful(r: np.ndarray, f: np.ndarray) -> np.ndarray:
+    """Faithful galloping (S4): for each r_i, exponential search in f then
+    binary search — skips comparisons when |r| << |f|."""
+    out: List[int] = []
+    j = 0
+    fl = f.tolist()
+    n = len(fl)
+    for ri in r.tolist():
+        # exponential (galloping) phase
+        step = 1
+        lo = j
+        hi = j + 1
+        while hi < n and fl[hi] < ri:
+            lo = hi
+            hi = min(n, hi + step)
+            step <<= 1
+        # binary search phase in (lo, hi]
+        hi = min(hi, n - 1)
+        import bisect
+
+        j = bisect.bisect_left(fl, ri, lo, min(hi + 1, n))
+        if j < n and fl[j] == ri:
+            out.append(ri)
+    return np.asarray(out, dtype=_U16)
+
+
+def intersect_array_array(a: ArrayContainer, b: ArrayContainer) -> ArrayContainer:
+    """Merge when cardinalities within 64x, galloping otherwise (S4).
+
+    Production path uses vectorized binary search for both regimes (numpy's
+    searchsorted); `galloping_intersect_faithful` preserves the paper's exact
+    control flow for validation.
+    """
+    small, large = (a.arr, b.arr) if a.arr.size <= b.arr.size else (b.arr, a.arr)
+    if small.size == 0:
+        return ArrayContainer()
+    return ArrayContainer(_merge_intersect(small, large))
+
+
+def union_array_array(a: ArrayContainer, b: ArrayContainer) -> Container:
+    """S4 Array vs Array union: merge when sum <= 4096; otherwise set bits in
+    a bitmap, popcount, and convert back down if the true card <= 4096."""
+    total = a.arr.size + b.arr.size
+    if total <= ARRAY_MAX:
+        return ArrayContainer(np.union1d(a.arr, b.arr).astype(_U16))
+    words = array_to_bitmap(a.arr)
+    idx = b.arr.astype(np.int64)
+    np.bitwise_or.at(words, idx >> 6, (_U64(1) << (idx & 63).astype(_U64)))
+    c = popcount_words(words)
+    if c <= ARRAY_MAX:
+        return ArrayContainer(bitmap_to_array(words))
+    return BitmapContainer(words, c)
+
+
+def container_or(a: Container, b: Container) -> Container:
+    if isinstance(a, BitmapContainer):
+        if isinstance(b, BitmapContainer):
+            return union_bitmap_bitmap(a, b)
+        return union_array_bitmap(b, a)
+    if isinstance(b, BitmapContainer):
+        return union_array_bitmap(a, b)
+    return union_array_array(a, b)
+
+
+def container_and(a: Container, b: Container) -> Container:
+    if isinstance(a, BitmapContainer):
+        if isinstance(b, BitmapContainer):
+            return intersect_bitmap_bitmap(a, b)
+        return intersect_array_bitmap(b, a)
+    if isinstance(b, BitmapContainer):
+        return intersect_array_bitmap(a, b)
+    return intersect_array_array(a, b)
+
+
+def container_xor(a: Container, b: Container) -> Container:
+    """XOR (extension — the paper focuses on AND/OR; needed by the framework
+    for mask algebra). Same dense/sparse materialization discipline."""
+    wa = a.words if isinstance(a, BitmapContainer) else array_to_bitmap(a.arr)
+    wb = b.words if isinstance(b, BitmapContainer) else array_to_bitmap(b.arr)
+    words = np.bitwise_xor(wa, wb)
+    c = popcount_words(words)
+    if c > ARRAY_MAX:
+        return BitmapContainer(words, c)
+    return ArrayContainer(bitmap_to_array(words))
+
+
+def container_andnot(a: Container, b: Container) -> Container:
+    """A AND NOT B (extension; used for e.g. KV-page reclamation)."""
+    if isinstance(a, ArrayContainer):
+        if isinstance(b, BitmapContainer):
+            idx = a.arr.astype(np.int64)
+            hits = (b.words[idx >> 6] >> (idx & 63).astype(_U64)) & _U64(1)
+            return ArrayContainer(a.arr[~hits.astype(bool)])
+        pos = np.searchsorted(b.arr, a.arr)
+        pos_c = np.minimum(pos, max(b.arr.size - 1, 0))
+        if b.arr.size == 0:
+            return ArrayContainer(a.arr.copy())
+        mask = (pos < b.arr.size) & (b.arr[pos_c] == a.arr)
+        return ArrayContainer(a.arr[~mask])
+    wb = b.words if isinstance(b, BitmapContainer) else array_to_bitmap(b.arr)
+    words = np.bitwise_and(a.words, np.bitwise_not(wb))
+    c = popcount_words(words)
+    if c > ARRAY_MAX:
+        return BitmapContainer(words, c)
+    return ArrayContainer(bitmap_to_array(words))
+
+
+# =============================================================================
+# RoaringBitmap: the two-level index (paper S2-S4)
+# =============================================================================
+
+class RoaringBitmap:
+    """Sorted first-level key array + containers, per the paper.
+
+    Functional-style constructors (`from_array`) plus the mutating single-
+    element `add`/`remove` used by the paper's Fig. 2e/2f benchmarks.
+    """
+
+    __slots__ = ("keys", "containers")
+
+    def __init__(self, keys: Optional[List[int]] = None,
+                 containers: Optional[List[Container]] = None):
+        self.keys: List[int] = keys if keys is not None else []
+        self.containers: List[Container] = containers if containers is not None else []
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def from_array(cls, values: Iterable[int]) -> "RoaringBitmap":
+        v = np.asarray(sorted(set(int(x) for x in values)), dtype=np.int64)
+        return cls.from_sorted_unique(v)
+
+    @classmethod
+    def from_sorted_unique(cls, v: np.ndarray) -> "RoaringBitmap":
+        """Bulk build: segment by high 16 bits, choose container type by the
+        4096 rule."""
+        rb = cls()
+        if v.size == 0:
+            return rb
+        v = np.asarray(v, dtype=np.int64)
+        hi = v >> CHUNK_BITS
+        lo = (v & (CHUNK_SIZE - 1)).astype(_U16)
+        boundaries = np.nonzero(np.diff(hi))[0] + 1
+        starts = np.concatenate(([0], boundaries))
+        ends = np.concatenate((boundaries, [v.size]))
+        for s, e in zip(starts.tolist(), ends.tolist()):
+            key = int(hi[s])
+            chunk = lo[s:e]
+            if chunk.size > ARRAY_MAX:
+                rb.keys.append(key)
+                rb.containers.append(
+                    BitmapContainer(array_to_bitmap(chunk), chunk.size))
+            else:
+                rb.keys.append(key)
+                rb.containers.append(ArrayContainer(chunk.copy()))
+        return rb
+
+    # -- access operations (paper S3) ------------------------------------------
+    def _find_key(self, key: int) -> int:
+        """Binary search the first-level index; returns position or -pos-1."""
+        import bisect
+
+        i = bisect.bisect_left(self.keys, key)
+        if i < len(self.keys) and self.keys[i] == key:
+            return i
+        return -i - 1
+
+    def contains(self, x: int) -> bool:
+        i = self._find_key(x >> CHUNK_BITS)
+        if i < 0:
+            return False
+        return self.containers[i].contains(x & (CHUNK_SIZE - 1))
+
+    __contains__ = contains
+
+    def add(self, x: int) -> None:
+        key, low = x >> CHUNK_BITS, x & (CHUNK_SIZE - 1)
+        i = self._find_key(key)
+        if i >= 0:
+            self.containers[i] = self.containers[i].add(low)
+        else:
+            pos = -i - 1
+            self.keys.insert(pos, key)
+            self.containers.insert(pos, ArrayContainer(np.asarray([low], dtype=_U16)))
+
+    def remove(self, x: int) -> None:
+        key, low = x >> CHUNK_BITS, x & (CHUNK_SIZE - 1)
+        i = self._find_key(key)
+        if i < 0:
+            return
+        c = self.containers[i].remove(low)
+        if c.cardinality == 0:
+            del self.keys[i]
+            del self.containers[i]
+        else:
+            self.containers[i] = c
+
+    # -- aggregate queries (paper S2) -------------------------------------------
+    @property
+    def cardinality(self) -> int:
+        """Sum of at most ceil(n / 2^16) per-container counters."""
+        return sum(c.cardinality for c in self.containers)
+
+    def __len__(self) -> int:
+        return self.cardinality
+
+    def rank(self, x: int) -> int:
+        """# of set entries <= x: whole-container counters + one partial."""
+        key, low = x >> CHUNK_BITS, x & (CHUNK_SIZE - 1)
+        total = 0
+        for k, c in zip(self.keys, self.containers):
+            if k < key:
+                total += c.cardinality
+            elif k == key:
+                if isinstance(c, ArrayContainer):
+                    total += int(np.searchsorted(c.arr, _U16(low), side="right"))
+                else:
+                    full_words = low >> 6
+                    total += popcount_words(c.words[:full_words])
+                    rem = (low & 63) + 1
+                    total += int(int(c.words[full_words]) & ((1 << rem) - 1)).bit_count()
+            else:
+                break
+        return total
+
+    def select(self, j: int) -> int:
+        """Value of the j-th (0-based) smallest element."""
+        if j < 0 or j >= self.cardinality:
+            raise IndexError(j)
+        for k, c in zip(self.keys, self.containers):
+            if j < c.cardinality:
+                if isinstance(c, ArrayContainer):
+                    return (k << CHUNK_BITS) | int(c.arr[j])
+                return (k << CHUNK_BITS) | int(c.to_array()[j])
+            j -= c.cardinality
+        raise AssertionError("unreachable")
+
+    # -- binary logical operations (paper S4 first-level merge) -----------------
+    #
+    # The paper merges the two sorted first-level arrays in O(n1 + n2) integer
+    # comparisons; in numpy the same merge is done with vectorized sorted-set
+    # routines so that per-container *python* overhead is only paid for keys
+    # that actually produce work (all keys for OR, matching keys for AND).
+    def _binary_op(self, other: "RoaringBitmap", op, union_keys: bool) -> "RoaringBitmap":
+        out = RoaringBitmap()
+        ka = np.asarray(self.keys, dtype=np.int64)
+        kb = np.asarray(other.keys, dtype=np.int64)
+        if not union_keys:
+            common, ia, ib = np.intersect1d(ka, kb, assume_unique=True,
+                                            return_indices=True)
+            for k, i, j in zip(common.tolist(), ia.tolist(), ib.tolist()):
+                c = op(self.containers[i], other.containers[j])
+                if c.cardinality > 0:
+                    out.keys.append(k)
+                    out.containers.append(c)
+            return out
+        union = np.union1d(ka, kb)
+        pa = np.searchsorted(ka, union)
+        pb = np.searchsorted(kb, union)
+        in_a = (pa < ka.size) & (ka[np.minimum(pa, max(ka.size - 1, 0))] == union) \
+            if ka.size else np.zeros(union.size, dtype=bool)
+        in_b = (pb < kb.size) & (kb[np.minimum(pb, max(kb.size - 1, 0))] == union) \
+            if kb.size else np.zeros(union.size, dtype=bool)
+        for k, i, j, a_has, b_has in zip(union.tolist(), pa.tolist(), pb.tolist(),
+                                         in_a.tolist(), in_b.tolist()):
+            if a_has and b_has:
+                c = op(self.containers[i], other.containers[j])
+            elif a_has:
+                c = self.containers[i].clone()
+            else:
+                c = other.containers[j].clone()
+            if c.cardinality > 0:
+                out.keys.append(k)
+                out.containers.append(c)
+        return out
+
+    def __and__(self, other: "RoaringBitmap") -> "RoaringBitmap":
+        return self._binary_op(other, container_and, union_keys=False)
+
+    def __or__(self, other: "RoaringBitmap") -> "RoaringBitmap":
+        return self._binary_op(other, container_or, union_keys=True)
+
+    def __xor__(self, other: "RoaringBitmap") -> "RoaringBitmap":
+        return self._binary_op(other, container_xor, union_keys=True)
+
+    def andnot(self, other: "RoaringBitmap") -> "RoaringBitmap":
+        out = RoaringBitmap()
+        j = 0
+        for k, c in zip(self.keys, self.containers):
+            i = other._find_key(k)
+            if i < 0:
+                out.keys.append(k)
+                out.containers.append(c.clone())
+            else:
+                r = container_andnot(c, other.containers[i])
+                if r.cardinality > 0:
+                    out.keys.append(k)
+                    out.containers.append(r)
+        return out
+
+    # -- in-place union (S4 in-place variants) ----------------------------------
+    def ior(self, other: "RoaringBitmap") -> "RoaringBitmap":
+        """Self |= other, modifying bitmap containers in place when possible."""
+        i = j = 0
+        n2 = len(other.keys)
+        while j < n2:
+            k2 = other.keys[j]
+            if i >= len(self.keys) or self.keys[i] > k2:
+                self.keys.insert(i, k2)
+                self.containers.insert(i, other.containers[j].clone())
+                i += 1
+                j += 1
+            elif self.keys[i] < k2:
+                i += 1
+            else:
+                a, b = self.containers[i], other.containers[j]
+                if isinstance(a, BitmapContainer) and isinstance(b, BitmapContainer):
+                    self.containers[i] = union_bitmap_bitmap_inplace(a, b)
+                else:
+                    self.containers[i] = container_or(a, b)
+                i += 1
+                j += 1
+        return self
+
+    # -- export -----------------------------------------------------------------
+    def to_array(self) -> np.ndarray:
+        parts = []
+        for k, c in zip(self.keys, self.containers):
+            parts.append((k << CHUNK_BITS) + c.to_array().astype(np.int64))
+        if not parts:
+            return np.empty(0, dtype=np.int64)
+        return np.concatenate(parts)
+
+    def iter_values(self) -> Iterator[int]:
+        for k, c in zip(self.keys, self.containers):
+            base = k << CHUNK_BITS
+            for v in c.iter_values():
+                yield base + v
+
+    # -- size accounting (bits/item experiments) ---------------------------------
+    def size_in_bytes(self) -> int:
+        """Serialized size: 4 bytes/container header (16-bit key + 16-bit
+        cardinality) + container payloads + 8-byte index header."""
+        total = 8 + 4 * len(self.containers)
+        for c in self.containers:
+            total += c.size_in_bytes()
+        return total
+
+    def container_stats(self) -> Tuple[int, int]:
+        n_arr = sum(1 for c in self.containers if isinstance(c, ArrayContainer))
+        return n_arr, len(self.containers) - n_arr
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, RoaringBitmap):
+            return NotImplemented
+        return np.array_equal(self.to_array(), other.to_array())
+
+    def __repr__(self) -> str:
+        na, nb = self.container_stats()
+        return (f"RoaringBitmap(card={self.cardinality}, containers={na} array"
+                f" + {nb} bitmap)")
+
+
+# =============================================================================
+# Algorithm 4: optimized many-way union
+# =============================================================================
+
+def union_many(bitmaps: Sequence[RoaringBitmap]) -> RoaringBitmap:
+    """Paper Algorithm 4: min-heap of (key, container); for each key group,
+    clone the max-cardinality container, OR the rest in place *without*
+    cardinality maintenance, and recount once at the end."""
+    heap: List[Tuple[int, int, int]] = []  # (key, bitmap_idx, container_idx)
+    for bi, rb in enumerate(bitmaps):
+        for ci, k in enumerate(rb.keys):
+            heapq.heappush(heap, (k, bi, ci))
+    out = RoaringBitmap()
+    while heap:
+        key = heap[0][0]
+        group: List[Container] = []
+        while heap and heap[0][0] == key:
+            _, bi, ci = heapq.heappop(heap)
+            group.append(bitmaps[bi].containers[ci])
+        group.sort(key=lambda c: -c.cardinality)
+        a = group[0].clone()
+        if len(group) == 1:
+            out.keys.append(key)
+            out.containers.append(a)
+            continue
+        if isinstance(a, ArrayContainer):
+            # array mode: Alg. 4 line 13 — merge until it upgrades to bitmap
+            for qi, q in enumerate(group[1:]):
+                a = container_or(a, q)
+                if isinstance(a, BitmapContainer):
+                    break
+        if isinstance(a, BitmapContainer):
+            # bitmap mode: in-place ORs with deferred cardinality (lines 10-11);
+            # re-ORing containers already merged during array mode is a no-op
+            # (idempotent), so we simply sweep the whole group.
+            for q in group[1:]:
+                wq = q.words if isinstance(q, BitmapContainer) else array_to_bitmap(q.arr)
+                np.bitwise_or(a.words, wq, out=a.words)
+            a.cardinality = popcount_words(a.words)  # line 14: once at the end
+        out.keys.append(key)
+        out.containers.append(a)
+    return out

@@ -1,0 +1,4 @@
+from .pipeline import (SyntheticCorpus, BitmapIndex, DataPipeline,
+                       PipelineState)
+
+__all__ = ["SyntheticCorpus", "BitmapIndex", "DataPipeline", "PipelineState"]

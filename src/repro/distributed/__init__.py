@@ -1,0 +1,3 @@
+from . import context, sharding
+
+__all__ = ["context", "sharding"]

@@ -1,0 +1,67 @@
+"""Activation-sharding context: anchors for XLA's sharding propagation.
+
+SPMD propagation can lose the batch sharding through long scan chains and
+custom-vjp boundaries (observed: unsharded [global_batch, S, block, block]
+mask broadcasts in whisper's backward). The launcher declares the data-
+parallel axes once; the model body then pins its per-layer activations with
+``constrain_batch`` — a no-op outside a mesh context (unit tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DATA_AXES: Optional[tuple] = None
+_DATA_COUNT: int = 1
+_MODEL_AXIS: Optional[str] = None
+
+
+@contextlib.contextmanager
+def data_axes(axes: Sequence[str], count: int = 1,
+              model_axis: Optional[str] = "model"):
+    """Declare the mesh axes carrying the batch dim and their total size."""
+    global _DATA_AXES, _DATA_COUNT, _MODEL_AXIS
+    prev = (_DATA_AXES, _DATA_COUNT, _MODEL_AXIS)
+    _DATA_AXES, _DATA_COUNT, _MODEL_AXIS = tuple(axes), int(count), model_axis
+    try:
+        yield
+    finally:
+        _DATA_AXES, _DATA_COUNT, _MODEL_AXIS = prev
+
+
+def data_shard_count() -> int:
+    """Number of data-parallel shards (1 outside a launcher context)."""
+    return _DATA_COUNT if _DATA_AXES else 1
+
+
+def _axis(name):
+    if name == "data":
+        return _DATA_AXES if len(_DATA_AXES) > 1 else _DATA_AXES[0]
+    if name == "model":
+        return _MODEL_AXIS
+    if name == "all":                      # every axis (long-context seq dim)
+        axes = tuple(_DATA_AXES)
+        if _MODEL_AXIS and _MODEL_AXIS not in axes:
+            axes = axes + (_MODEL_AXIS,)
+        return axes
+    return None
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 of an activation to the data axes (rest unconstrained)."""
+    if _DATA_AXES is None or x.ndim < 1:
+        return x
+    spec = P(_axis("data"), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain(x: jax.Array, dims: Sequence[Optional[str]]) -> jax.Array:
+    """Pin arbitrary dims: dims entries are "data" | "model" | None."""
+    if _DATA_AXES is None:
+        return x
+    spec = P(*[_axis(d) for d in dims])
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,6 @@
+from .topk_roaring import (compress_leaf, decompress_leaf, compress_tree,
+                           decompress_tree, compressed_crosspod_mean,
+                           compression_ratio)
+
+__all__ = ["compress_leaf", "decompress_leaf", "compress_tree",
+           "decompress_tree", "compressed_crosspod_mean", "compression_ratio"]

@@ -1,0 +1,126 @@
+"""Roaring top-k gradient compression for cross-pod data parallelism.
+
+Top-k magnitude sparsification turns a gradient leaf into (indices, values).
+The index set is exactly the paper's workload: sorted 32-bit integers, often
+clustered (attention sinks, hot embedding rows) — so it is encoded as a
+Roaring *slab* (jax_roaring): chunked by high-16 bits, array containers for
+scattered coordinates, bitmap containers for dense hot regions, per-chunk
+cardinality counters for exact sizing without decompression.
+
+Cross-pod sync then all-gathers the compressed (slab, values) payloads over
+the "pod" axis and merges with the many-way union discipline of Algorithm 4
+(bitmap-domain OR accumulation, deferred cardinality) — realized here as a
+scatter-add of each pod's sparse contribution, which is the linear-algebra
+analogue (values must sum, not OR).
+
+Wire cost per pod: 16k + k*4 bits vs 32N dense — e.g. k = N/100 gives ~50x.
+``compression_ratio`` reports the exact roaring-encoded size via the
+cardinality counters.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_roaring as jr
+
+
+class CompressedLeaf(NamedTuple):
+    slab_keys: jax.Array    # i32[C]
+    slab_card: jax.Array    # i32[C]
+    slab_kind: jax.Array    # i32[C]
+    slab_data: jax.Array    # u16[C, 4096]
+    values: jax.Array       # f32[k] (aligned with ascending index order)
+
+
+def _capacity_for(n: int, k: int) -> int:
+    """Static container capacity: every 2^16-chunk the indices could touch."""
+    return max(1, min((n + jr.CHUNK_SIZE - 1) // jr.CHUNK_SIZE, 2 * k))
+
+
+def compress_leaf(g: jax.Array, k: int) -> CompressedLeaf:
+    """Top-k by |g|; indices roaring-encoded, values packed in index order."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    k = min(k, n)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = jnp.sort(idx)                              # ascending (roaring order)
+    vals = flat[idx]
+    cap = _capacity_for(n, k)
+    slab = jr.from_indices(idx, jnp.ones((k,), bool), cap)
+    return CompressedLeaf(slab.keys, slab.card, slab.kind, slab.data, vals)
+
+
+def decompress_leaf(c: CompressedLeaf, shape, dtype) -> jax.Array:
+    """Scatter values back to a dense leaf."""
+    slab = jr.RoaringSlab(c.slab_keys, c.slab_card, c.slab_kind, c.slab_data)
+    idx, valid = jr.to_indices(slab, c.values.shape[0])
+    n = int(np.prod(shape))
+    out = jnp.zeros((n,), jnp.float32).at[jnp.where(valid, idx, n)].add(
+        c.values * valid.astype(jnp.float32), mode="drop")
+    return out.reshape(shape).astype(dtype)
+
+
+def compress_tree(grads, ratio: float = 0.01, min_k: int = 64):
+    """Compress every leaf to ceil(ratio * n) entries (static shapes)."""
+    def one(g):
+        k = max(min_k, int(np.ceil(g.size * ratio)))
+        return compress_leaf(g, k)
+    return jax.tree.map(one, grads)
+
+
+def decompress_tree(compressed, like):
+    return jax.tree.map(
+        lambda c, p: decompress_leaf(c, p.shape, p.dtype), compressed, like,
+        is_leaf=lambda x: isinstance(x, CompressedLeaf))
+
+
+def compression_ratio(c: CompressedLeaf, n: int) -> float:
+    """Exact roaring-encoded bits vs dense f32 gradient bits.
+
+    Uses the per-container cardinality counters (paper S2): array containers
+    cost 16 bits/index, bitmap containers 2^16 bits flat, plus 32-bit
+    header per container; values add 32 bits each.
+    """
+    card = np.asarray(c.slab_card)
+    kind = np.asarray(c.slab_kind)
+    bits = 32 * int((kind != 0).sum())
+    bits += int((16 * card[kind == 1]).sum())
+    bits += int((kind == 2).sum()) * (1 << 16)
+    bits += 32 * int(c.values.shape[0])
+    return bits / (32.0 * n)
+
+
+def compressed_crosspod_mean(grads, *, axis_name: str, ratio: float = 0.01,
+                             min_k: int = 64):
+    """Drop-in replacement for ``jax.lax.pmean`` over the pod axis.
+
+    Inside shard_map/pjit with a "pod" axis: compress locally, all-gather the
+    compressed payloads (16k + 32k bits instead of 32N), scatter-add every
+    pod's sparse contribution (the Alg. 4 merge, additive form), divide by
+    pod count. Error feedback is left to the caller (train loop keeps the
+    residual).
+    """
+    n_pods = jax.lax.axis_size(axis_name)
+
+    def one(g):
+        k = max(min_k, int(np.ceil(g.size * ratio)))
+        c = compress_leaf(g, k)
+        # all-gather compressed payloads across pods: [P, ...]
+        gathered = jax.lax.all_gather(c, axis_name)
+        dense = jnp.zeros((g.size,), jnp.float32)
+
+        def add_pod(i, acc):
+            ci = jax.tree.map(lambda x: x[i], gathered)
+            return acc + decompress_leaf(
+                ci, (g.size,), jnp.float32)
+
+        dense = jax.lax.fori_loop(0, n_pods, add_pod, dense)
+        return (dense / n_pods).reshape(g.shape).astype(g.dtype)
+
+    return jax.tree.map(one, grads)

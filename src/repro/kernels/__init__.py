@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+- ``roaring``: fused container word-op + popcount (Algorithms 1/3) and the
+  vectorized array-intersection (the galloping adaptation).
+- ``sparse_attn``: roaring-driven block-sparse flash attention (the framework
+  integration that makes ``long_500k`` sub-quadratic) and paged decode.
+
+Every kernel ships ``ops.py`` (jit'd wrapper with backend auto-detection) and
+``ref.py`` (pure-jnp oracle used by tests and by the dry-run lowering).
+"""

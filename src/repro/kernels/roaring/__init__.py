@@ -1,0 +1,3 @@
+from .ops import container_op, array_intersect
+
+__all__ = ["container_op", "array_intersect"]

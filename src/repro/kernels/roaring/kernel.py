@@ -1,0 +1,161 @@
+"""Pallas TPU kernels for Roaring container operations.
+
+Two kernels:
+
+1. ``container_op``: the fused word-op + popcount of Algorithms 1/3. One grid
+   step processes one 8 kB container-row pair, reshaped u16[32, 128] to match
+   the VPU lane layout (last dim 128). The cardinality is accumulated in the
+   same VMEM pass as the bitwise op — the TPU analogue of the paper's
+   "popcount rides the superscalar pipeline alongside the OR" observation
+   (S4, factors 1-3). Container-type tags arrive via scalar prefetch; fully
+   empty pairs skip the VPU work with ``@pl.when`` (the DMA still runs — on
+   TPU the bandwidth term is the floor, see DESIGN.md).
+
+2. ``array_intersect``: the galloping adaptation. Each lane binary-searches
+   the other container's packed sorted array in 12 steps (2^12 = 4096), so
+   comparison count per lane matches galloping's log bound while the VPU
+   amortizes it across 4096 lanes.
+
+Block shapes: container rows are (32, 128) u16 tiles = 8 kB — one row per
+grid step keeps VMEM usage at ~3 tiles (a, b, out) plus scalars, far under
+the ~16 MB VMEM budget, and the 128-wide minor dim is MXU/VPU aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROW_WORDS = 4096
+ROW_SHAPE = (32, 128)          # u16[32,128] == one 8 kB container row
+KIND_EMPTY = 0
+
+_OPS = {
+    "and": jnp.bitwise_and,
+    "or": jnp.bitwise_or,
+    "xor": jnp.bitwise_xor,
+    "andnot": lambda a, b: jnp.bitwise_and(a, ~b),
+}
+
+
+def _container_op_kernel(kinds_ref, a_ref, b_ref, out_ref, card_ref, *, op: str):
+    """One container-row pair per grid step; fused op + popcount."""
+    i = pl.program_id(0)
+    ka = kinds_ref[2 * i]
+    kb = kinds_ref[2 * i + 1]
+    both_empty = jnp.logical_and(ka == KIND_EMPTY, kb == KIND_EMPTY)
+
+    @pl.when(jnp.logical_not(both_empty))
+    def _compute():
+        res = _OPS[op](a_ref[0], b_ref[0])
+        out_ref[0] = res
+        # Alg. 1 line 7 / Alg. 3 line 5: popcount fused into the same pass
+        card_ref[0] = jnp.sum(
+            jax.lax.population_count(res).astype(jnp.int32))
+
+    @pl.when(both_empty)
+    def _skip():
+        out_ref[0] = jnp.zeros(ROW_SHAPE, jnp.uint16)
+        card_ref[0] = 0
+
+
+def container_op_pallas(a_bits: jax.Array, b_bits: jax.Array,
+                        kinds: jax.Array, op: str,
+                        interpret: bool = True):
+    """Batched container op.
+
+    a_bits, b_bits: u16[C, 4096] bitmap-domain rows (key-aligned).
+    kinds: i32[2C] interleaved (kind_a0, kind_b0, kind_a1, ...) tags.
+    Returns (out_bits u16[C, 4096], card i32[C]).
+    """
+    C = a_bits.shape[0]
+    a3 = a_bits.reshape(C, *ROW_SHAPE)
+    b3 = b_bits.reshape(C, *ROW_SHAPE)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i, k: (i,), memory_space=pltpu.SMEM),
+        ],
+    )
+    out, card = pl.pallas_call(
+        functools.partial(_container_op_kernel, op=op),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, *ROW_SHAPE), jnp.uint16),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(kinds, a3, b3)
+    return out.reshape(C, ROW_WORDS), card
+
+
+def _array_intersect_kernel(cards_ref, a_ref, b_ref, hit_ref, count_ref):
+    """Vectorized binary search: every element of A (4096 lanes) searches the
+    packed sorted array B in 12 halving steps — galloping's log bound, SIMD."""
+    i = pl.program_id(0)
+    card_b = cards_ref[2 * i + 1]
+    a = a_ref[0].astype(jnp.int32)                # (32,128) values (0xFFFF pad)
+    b = b_ref[0].reshape(ROW_WORDS).astype(jnp.int32)
+
+    lo = jnp.zeros(ROW_SHAPE, jnp.int32)
+    hi = jnp.full(ROW_SHAPE, card_b, jnp.int32)   # search window [lo, hi)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        vals = jnp.take(b, jnp.clip(mid, 0, ROW_WORDS - 1))
+        go_right = vals < a
+        return (jnp.where(go_right, mid + 1, lo), jnp.where(go_right, hi, mid))
+
+    lo, hi = jax.lax.fori_loop(0, 12, body, (lo, hi))
+    found = jnp.take(b, jnp.clip(lo, 0, ROW_WORDS - 1)) == a
+    found = jnp.logical_and(found, lo < card_b)
+    card_a = cards_ref[2 * i]
+    flat_pos = (jax.lax.broadcasted_iota(jnp.int32, ROW_SHAPE, 0) * 128
+                + jax.lax.broadcasted_iota(jnp.int32, ROW_SHAPE, 1))
+    found = jnp.logical_and(found, flat_pos < card_a)
+    hit_ref[0] = found.astype(jnp.uint16)
+    count_ref[0] = jnp.sum(found.astype(jnp.int32))
+
+
+def array_intersect_pallas(a_arr: jax.Array, b_arr: jax.Array,
+                           cards: jax.Array, interpret: bool = True):
+    """Intersect packed sorted array containers (0xFFFF-padded).
+
+    a_arr, b_arr: u16[C, 4096]; cards: i32[2C] interleaved (card_a, card_b).
+    Returns (hits u16[C, 4096] — 1 where a value of A is also in B — and
+    count i32[C]). Compaction of hits to packed form stays in XLA (scatter).
+    """
+    C = a_arr.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i, k: (i,), memory_space=pltpu.SMEM),
+        ],
+    )
+    hits, count = pl.pallas_call(
+        _array_intersect_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, *ROW_SHAPE), jnp.uint16),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cards, a_arr.reshape(C, *ROW_SHAPE), b_arr.reshape(C, *ROW_SHAPE))
+    return hits.reshape(C, ROW_WORDS), count

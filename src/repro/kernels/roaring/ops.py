@@ -1,0 +1,44 @@
+"""Jit'd wrappers for the roaring container kernels.
+
+``use_pallas=None`` auto-selects: the Pallas body targets TPU; on CPU (this
+container) it runs in interpret mode inside tests, while jitted production
+entry points fall back to the XLA reference formulation (same math).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("op", "use_pallas", "interpret"))
+def container_op(a_bits, b_bits, kinds, op: str = "or",
+                 use_pallas: bool | None = None, interpret: bool = False):
+    """Batched fused container op + popcount over key-aligned rows."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _k.container_op_pallas(a_bits, b_bits, kinds, op,
+                                      interpret=not _on_tpu())
+    return _ref.container_op_ref(a_bits, b_bits, kinds, op)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def array_intersect(a_arr, b_arr, cards,
+                    use_pallas: bool | None = None, interpret: bool = False):
+    """Batched array-container intersection (vectorized galloping)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _k.array_intersect_pallas(a_arr, b_arr, cards,
+                                         interpret=not _on_tpu())
+    return _ref.array_intersect_ref(a_arr, b_arr, cards)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the roaring container kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ROW_WORDS = 4096
+
+_OPS = {
+    "and": jnp.bitwise_and,
+    "or": jnp.bitwise_or,
+    "xor": jnp.bitwise_xor,
+    "andnot": lambda a, b: jnp.bitwise_and(a, ~b),
+}
+
+
+def container_op_ref(a_bits: jax.Array, b_bits: jax.Array,
+                     kinds: jax.Array, op: str):
+    """Word op + popcount, unfused XLA formulation."""
+    res = _OPS[op](a_bits, b_bits)
+    ka, kb = kinds[0::2], kinds[1::2]
+    live = jnp.logical_or(ka != 0, kb != 0)
+    res = res * live[:, None].astype(jnp.uint16)
+    card = jnp.sum(jax.lax.population_count(res).astype(jnp.int32), axis=-1)
+    return res, card
+
+
+def array_intersect_ref(a_arr: jax.Array, b_arr: jax.Array, cards: jax.Array):
+    """searchsorted-based oracle for the batched array intersection."""
+    card_a, card_b = cards[0::2], cards[1::2]
+
+    def one(a, b, ca, cb):
+        pos = jnp.searchsorted(b, a)
+        pos_c = jnp.clip(pos, 0, ROW_WORDS - 1)
+        found = (b[pos_c] == a) & (pos < cb)
+        found = found & (jnp.arange(ROW_WORDS) < ca)
+        return found.astype(jnp.uint16), jnp.sum(found.astype(jnp.int32))
+
+    return jax.vmap(one)(a_arr, b_arr, card_a, card_b)

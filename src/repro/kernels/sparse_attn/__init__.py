@@ -1,0 +1,3 @@
+from .ops import sparse_attention, paged_decode
+
+__all__ = ["sparse_attention", "paged_decode"]

@@ -1,0 +1,232 @@
+"""Roaring-driven block-sparse flash attention (splash-style, TPU Pallas).
+
+The paper's two-level index becomes attention metadata: each query-block row
+owns a Roaring set of active key-blocks; ``compile_mask`` (sparsity package)
+extracts every row's packed block list via Algorithm 2. The kernel consumes
+that list through *scalar prefetch*: the KV BlockSpec index map reads the
+next physical block id from the prefetched list, so only active KV blocks are
+ever DMA'd from HBM — the TPU equivalent of Roaring's "skip entire chunks of
+the other bitmap" advantage over RLE formats (paper S1).
+
+Kernels:
+  * ``sparse_flash_attention``: training/prefill forward. Grid
+    (B, H, num_q_blocks, max_active); online-softmax scratch in VMEM.
+  * ``paged_decode_attention``: single-token decode against a paged KV cache
+    whose per-sequence page lists come from a Roaring page table.
+
+Block sizes default to (128, 128): the MXU-aligned sweet spot; one q-block
+(128 x d_head) + one kv-block + softmax scratch stays well under VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# =============================================================================
+# training / prefill forward
+# =============================================================================
+
+def _flash_kernel(counts_ref, kvidx_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, max_active: int, block_q: int, block_kv: int,
+                  causal: bool, softcap: float | None):
+    qb, j = pl.program_id(2), pl.program_id(3)
+    count = counts_ref[qb]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    @pl.when(j < count)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kv_block = kvidx_ref[qb * max_active + j]
+        if causal:
+            row = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            col = kv_block * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(col <= row, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def sparse_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           kv_idx: jax.Array, counts: jax.Array,
+                           *, block_q: int = 128, block_kv: int = 128,
+                           causal: bool = True, softcap: float | None = None,
+                           scale: float | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """Block-sparse flash attention forward.
+
+    q: [B, H, S, D]; k, v: [B, KVH, S_kv, D] (GQA: H a multiple of KVH).
+    kv_idx: i32[num_q_blocks, max_active] packed active kv-block ids per
+    query-block row (from Roaring extraction); counts: i32[num_q_blocks].
+    """
+    B, H, S, D = q.shape
+    KVH, S_kv = k.shape[1], k.shape[2]
+    group = H // KVH
+    num_qb, max_active = kv_idx.shape
+    assert S % block_q == 0 and S_kv % block_kv == 0
+    assert num_qb == S // block_q
+    if scale is None:
+        scale = D ** -0.5
+
+    flat_idx = kv_idx.reshape(-1)
+    grid = (B, H, num_qb, max_active)
+
+    def q_map(b, h, qb, j, counts, kvidx):
+        return (b, h, qb, 0)
+
+    def kv_map(b, h, qb, j, counts, kvidx):
+        return (b, h // group, kvidx[qb * max_active + j], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), q_map),
+            pl.BlockSpec((1, 1, block_kv, D), kv_map),
+            pl.BlockSpec((1, 1, block_kv, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _flash_kernel, scale=scale, max_active=max_active, block_q=block_q,
+        block_kv=block_kv, causal=causal, softcap=softcap)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(counts, flat_idx, q, k, v)
+
+
+# =============================================================================
+# paged decode (one new token against a roaring-paged KV cache)
+# =============================================================================
+
+def _decode_kernel(counts_ref, pages_ref, lens_ref, starts_ref,
+                   q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, max_pages: int,
+                   page_size: int, softcap: float | None):
+    b, j = pl.program_id(0), pl.program_id(2)
+    count = counts_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    @pl.when(j < count)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)           # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        # logical position of this page is j (page lists are order-preserving)
+        pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        live = jnp.logical_and(pos < lens_ref[b], pos >= starts_ref[b])
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           page_idx: jax.Array, counts: jax.Array,
+                           lengths: jax.Array, starts: jax.Array | None = None,
+                           *, softcap: float | None = None,
+                           scale: float | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """Decode attention for one new token per sequence.
+
+    q: [B, KVH, G, D] (G = query heads per KV head).
+    k_pages/v_pages: [P, page_size, KVH, D] global page pools.
+    page_idx: i32[B, max_pages] physical page ids per sequence, packed from
+    the Roaring page table; counts: i32[B] pages in use; lengths: i32[B]
+    tokens in the KV cache per sequence; starts: i32[B] first visible
+    position (sliding-window layers; default 0).
+    """
+    B, KVH, G, D = q.shape
+    P, page_size = k_pages.shape[0], k_pages.shape[1]
+    max_pages = page_idx.shape[1]
+    if scale is None:
+        scale = D ** -0.5
+    if starts is None:
+        starts = jnp.zeros((B,), jnp.int32)
+
+    flat_pages = page_idx.reshape(-1)
+    grid = (B, KVH, max_pages)
+
+    def q_map(b, kvh, j, counts, pages, lens, starts):
+        return (b, kvh, 0, 0)
+
+    def kv_map(b, kvh, j, counts, pages, lens, starts):
+        return (pages[b * max_pages + j], 0, kvh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), q_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_decode_kernel, scale=scale, max_pages=max_pages,
+                             page_size=page_size, softcap=softcap)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(counts, flat_pages, lengths, starts, q, k_pages, v_pages)

@@ -1,0 +1,68 @@
+"""Public entry points for roaring block-sparse attention.
+
+``sparse_attention`` is differentiable: forward runs the Pallas kernel on TPU
+(interpret-mode on CPU when requested); backward recomputes through the
+reference formulation (flash-style recompute — no S x S residuals are saved).
+The dry-run lowers the reference path (identical math; DESIGN.md S6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def sparse_attention(q, k, v, kv_idx, counts, block_q=128, block_kv=128,
+                     causal=True, softcap=None, scale=None, use_pallas=False):
+    if use_pallas:
+        return _k.sparse_flash_attention(
+            q, k, v, kv_idx, counts, block_q=block_q, block_kv=block_kv,
+            causal=causal, softcap=softcap, scale=scale,
+            interpret=not _on_tpu())
+    return _ref.sparse_attention_ref(
+        q, k, v, kv_idx, counts, block_q=block_q, block_kv=block_kv,
+        causal=causal, softcap=softcap, scale=scale)
+
+
+def _fwd(q, k, v, kv_idx, counts, block_q, block_kv, causal, softcap, scale,
+         use_pallas):
+    out = sparse_attention(q, k, v, kv_idx, counts, block_q, block_kv, causal,
+                           softcap, scale, use_pallas)
+    return out, (q, k, v, kv_idx, counts)
+
+
+def _bwd(block_q, block_kv, causal, softcap, scale, use_pallas, res, g):
+    q, k, v, kv_idx, counts = res
+
+    def f(q, k, v):
+        return _ref.sparse_attention_ref(
+            q, k, v, kv_idx, counts, block_q=block_q, block_kv=block_kv,
+            causal=causal, softcap=softcap, scale=scale)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None
+
+
+sparse_attention.defvjp(_fwd, _bwd)
+
+
+def paged_decode(q, k_pages, v_pages, page_idx, counts, lengths, starts=None,
+                 softcap=None, scale=None, use_pallas=False):
+    """Decode attention (inference only — no vjp needed)."""
+    if use_pallas:
+        return _k.paged_decode_attention(
+            q, k_pages, v_pages, page_idx, counts, lengths, starts,
+            softcap=softcap, scale=scale, interpret=not _on_tpu())
+    return _ref.paged_decode_ref(q, k_pages, v_pages, page_idx, counts,
+                                 lengths, starts, softcap=softcap, scale=scale)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the sparse attention kernels.
+
+These are also the formulations lowered by the multi-pod dry-run: identical
+math and sparsity accounting, expressed as dense masked attention so XLA's
+cost analysis reflects the same FLOPs/bytes the TPU kernel would do per
+*active* block (inactive blocks are masked; the FLOP accounting for roofline
+corrects for block sparsity via the mask density — see benchmarks.roofline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def block_mask_to_dense(kv_idx: jax.Array, counts: jax.Array,
+                        num_kv_blocks: int) -> jax.Array:
+    """[num_qb, max_active] packed block lists -> bool[num_qb, num_kv_blocks]."""
+    num_qb, max_active = kv_idx.shape
+    valid = jnp.arange(max_active)[None, :] < counts[:, None]
+    dense = jnp.zeros((num_qb, num_kv_blocks), bool)
+    rows = jnp.repeat(jnp.arange(num_qb), max_active).reshape(num_qb, max_active)
+    dense = dense.at[rows, kv_idx].max(valid)
+    return dense
+
+
+def sparse_attention_ref(q, k, v, kv_idx, counts, *, block_q=128, block_kv=128,
+                         causal=True, softcap=None, scale=None):
+    """Dense masked attention oracle for the block-sparse flash kernel."""
+    B, H, S, D = q.shape
+    KVH, S_kv = k.shape[1], k.shape[2]
+    group = H // KVH
+    if scale is None:
+        scale = D ** -0.5
+    blockmask = block_mask_to_dense(kv_idx, counts, S_kv // block_kv)
+    elem = jnp.repeat(jnp.repeat(blockmask, block_q, axis=0), block_kv, axis=1)
+    if causal:
+        elem = elem & (jnp.arange(S_kv)[None, :] <= jnp.arange(S)[:, None])
+    kf = jnp.repeat(k, group, axis=1)
+    vf = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(elem[None, None], s, NEG_INF)
+    # fully-masked rows produce zeros (matches kernel's l=0 -> out=0)
+    any_live = jnp.any(elem, axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32))
+    out = jnp.where(any_live[None, None, :, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def paged_decode_ref(q, k_pages, v_pages, page_idx, counts, lengths,
+                     starts=None, *, softcap=None, scale=None):
+    """Gather-then-attend oracle for the paged decode kernel."""
+    B, KVH, G, D = q.shape
+    P, page_size = k_pages.shape[0], k_pages.shape[1]
+    max_pages = page_idx.shape[1]
+    if scale is None:
+        scale = D ** -0.5
+    if starts is None:
+        starts = jnp.zeros((B,), jnp.int32)
+    # gather logical KV streams: [B, max_pages*page_size, KVH, D]
+    k_seq = k_pages[page_idx].reshape(B, max_pages * page_size, KVH, D)
+    v_seq = v_pages[page_idx].reshape(B, max_pages * page_size, KVH, D)
+    pos = jnp.arange(max_pages * page_size)
+    live = (pos[None, :] < lengths[:, None]) & \
+        (pos[None, :] >= starts[:, None])                       # [B, L]
+    s = jnp.einsum("bkgd,blkd->bkgl", q.astype(jnp.float32),
+                   k_seq.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", p, v_seq.astype(jnp.float32))
+    return out.astype(q.dtype)

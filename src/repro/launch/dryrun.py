@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST stay first: jax locks the device count at first
+# initialization, and the production meshes need 512 host placeholder
+# devices. (Tests/benches import other entry points and see 1 device.)
+#
+# Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+# cell against the production meshes, prove memory fits
+# (``memory_analysis``), and extract the roofline inputs (HLO FLOPs/bytes,
+# per-device collective bytes with layer-scan trip-count correction, and the
+# analytic FLOP model) into artifacts/dryrun/*.json.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun \
+#       --archs all --shapes all --meshes single,multi --out artifacts/dryrun
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.models import flops as F
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12            # bf16 FLOP/s per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+# cheap-first ordering: fast feedback, giants last
+ARCH_ORDER = [
+    "whisper-base", "stablelm-1.6b", "rwkv6-1.6b", "gemma2-2b",
+    "stablelm-3b", "starcoder2-15b", "qwen2-vl-72b", "dbrx-132b",
+    "llama4-maverick-400b-a17b", "jamba-1.5-large-398b",
+]
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             skip_existing: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape}__{mesh_name}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    os.makedirs(out_dir, exist_ok=True)
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            print(f"[{cell_id}] cached ok")
+            return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    spec = SHAPES[shape]
+    cfg = get_config(arch)
+    record = {"cell": cell_id, "arch": arch, "shape": shape,
+              "mesh": dict(mesh.shape), "chips": n_chips, "ok": False}
+    try:
+        from repro.distributed.context import data_axes
+        fn, args_sds, in_sh, donate, meta = build_cell(arch, shape, mesh)
+        record.update(meta)
+        batch_axes = ("pod", "data", "model") \
+            if os.environ.get("REPRO_SHARDING_MODE") == "replicate" \
+            else ("pod", "data")
+        daxes = [a for a in batch_axes if a in mesh.shape]
+        dcount = int(np.prod([mesh.shape[a] for a in daxes]))
+        t0 = time.time()
+        with mesh, data_axes(daxes, dcount):
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+            lowered = jitted.lower(*args_sds)
+            record["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        print(f"[{cell_id}] memory_analysis: {record['memory_analysis']}",
+              flush=True)
+        ca = compiled.cost_analysis() or {}
+        record["cost_analysis"] = {
+            "flops": float(ca.get("flops", -1.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+        }
+        print(f"[{cell_id}] cost_analysis: "
+              f"flops={record['cost_analysis']['flops']:.3e} "
+              f"bytes={record['cost_analysis']['bytes_accessed']:.3e}",
+              flush=True)
+
+        # collective bytes from the partitioned module; while-bodies are
+        # multiplied by known trip counts. Depth order: microbatch loop (if
+        # any) is outermost, then the layer scan, then sequence/flash scans.
+        inner = max(spec.seq_len // 512, 1)
+        micro = record.get("microbatch")
+        n_micro = (spec.global_batch // micro) if micro else None
+        trips = ([n_micro] if n_micro else []) + \
+            [cfg.n_superblocks, inner, inner]
+        hlo = compiled.as_text()
+        per_kind, total_coll, counts = collective_bytes(hlo, trips)
+        record["collectives"] = {"per_kind": per_kind, "counts": counts,
+                                 "per_device_bytes": total_coll,
+                                 "trip_counts": trips}
+
+        # analytic FLOP/byte model (XLA cost analysis counts loop bodies
+        # once; see models/flops.py and tests/test_flops_model.py).
+        # Roaring active-window decode shrinks the live KV (long_window).
+        seq_eff = record.get("long_window", spec.seq_len)
+        fc = F.cell_flops(cfg, kind=spec.kind, seq_len=seq_eff,
+                          global_batch=spec.global_batch)
+        mf = F.model_flops_reference(cfg, kind=spec.kind,
+                                     seq_len=seq_eff,
+                                     global_batch=spec.global_batch)
+        hbm = F.cell_hbm_bytes(cfg, kind=spec.kind, seq_len=seq_eff,
+                               global_batch=spec.global_batch,
+                               optimizer=record.get("optimizer", "adamw"))
+        record["analytic"] = {
+            "flops_total": fc.total, "flops_matmul": fc.matmul,
+            "flops_attention": fc.attention,
+            "flops_elementwise": fc.elementwise,
+            "model_flops_ref": mf, "hbm_bytes": hbm}
+
+        compute_term = fc.total / (n_chips * PEAK_FLOPS)
+        memory_term = hbm / (n_chips * HBM_BW)
+        collective_term = total_coll / ICI_BW
+        terms = {"compute_s": compute_term, "memory_s": memory_term,
+                 "collective_s": collective_term}
+        dominant = max(terms, key=terms.get)
+        record["roofline"] = {
+            **terms, "dominant": dominant,
+            "useful_ratio": mf / max(fc.total, 1.0),
+            "roofline_fraction": compute_term / max(sum(terms.values()), 1e-30),
+        }
+        record["ok"] = True
+        print(f"[{cell_id}] roofline: compute={compute_term:.4f}s "
+              f"memory={memory_term:.4f}s collective={collective_term:.4f}s "
+              f"dominant={dominant}", flush=True)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-3000:]
+        print(f"[{cell_id}] FAILED: {record['error']}", flush=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="all")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_ORDER if args.archs == "all" else args.archs.split(",")
+    shapes = list(SHAPES) if args.shapes == "all" else args.shapes.split(",")
+    meshes = args.meshes.split(",")
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                rec = run_cell(arch, shape, m == "multi", args.out,
+                               skip_existing=not args.no_skip_existing)
+                results.append(rec)
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n=== dry-run: {ok}/{len(results)} cells ok ===")
+    for r in results:
+        if not r.get("ok"):
+            print(f"  FAILED {r['cell']}: {r.get('error', '?')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Post-SPMD HLO analysis: collective bytes, loop-aware accounting.
+
+``compiled.as_text()`` is the partitioned per-device module; collective ops
+appear with their *per-device* result shapes. XLA's HloCostAnalysis counts
+while-loop bodies once, so ops inside the layer scan must be multiplied by
+the trip count — computations are walked with their while-nesting depth and
+the caller supplies per-depth trip counts (depth 1 = layer scan, deeper =
+inner scans like flash/ssm over sequence blocks).
+
+Parsing notes (validated against jax 0.8 / XLA HLO text):
+  * computation headers look like ``%region_4.4_spmd (arg: (...)) -> (...) {``
+    — parameter lists nest parentheses, so headers are matched on the
+    trailing ``-> ... {`` instead of a balanced-paren scan;
+  * while ops carry ``condition=%name, body=%name``;
+  * async collectives appear as ``<kind>-start`` / ``<kind>-done`` pairs —
+    only the ``-start`` (or the sync form) is counted.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(
+    r"=\s*(?P<type>.*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<variant>-start|-done)?\(")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every array shape in a (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name -> instruction lines (flat; bodies end at '}')"""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = _HEADER_RE.match(line)
+        if m:
+            current = m.group(1)
+            comps[current] = []
+            continue
+        stripped = line.strip()
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is not None and "=" in stripped:
+            comps[current].append(stripped)
+    return comps
+
+
+def while_body_depths(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """While-nesting depth per computation (0 = outside any while)."""
+    parent_while: Dict[str, str] = {}    # body/cond comp -> comp with the while
+    called_by: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln or "= while(" in ln:
+                for m in _WHILE_BODY_RE.finditer(ln):
+                    parent_while[m.group(1)] = cname
+                for m in _WHILE_COND_RE.finditer(ln):
+                    parent_while[m.group(1)] = cname
+            for m in _CALL_RE.finditer(ln):
+                called_by.setdefault(m.group(1), cname)
+
+    def depth(c, seen=frozenset()):
+        if c in seen:
+            return 0
+        seen = seen | {c}
+        if c in parent_while:
+            return 1 + depth(parent_while[c], seen)
+        if c in called_by:
+            return depth(called_by[c], seen)
+        return 0
+
+    return {c: depth(c) for c in comps}
+
+
+def collective_bytes(hlo_text: str, trip_counts: List[int] | None = None):
+    """Returns (per_kind bytes, total bytes, per_kind counts), loop-aware.
+
+    ``trip_counts[d]`` multiplies ops at while depth d+1 (cumulative).
+    Missing depths default to 1.
+    """
+    trip_counts = trip_counts or []
+    comps = parse_computations(hlo_text)
+    depths = while_body_depths(comps)
+    per_kind: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for cname, lines in comps.items():
+        d = depths.get(cname, 0)
+        mult = 1.0
+        for lvl in range(d):
+            mult *= trip_counts[lvl] if lvl < len(trip_counts) else 1.0
+        for ln in lines:
+            m = _OP_RE.search(ln)
+            if not m or m.group("variant") == "-done":
+                continue
+            b = _shape_bytes(m.group("type"))
+            per_kind[m.group("kind")] += b * mult
+            counts[m.group("kind")] += 1
+    return dict(per_kind), float(sum(per_kind.values())), dict(counts)

@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Single pod: 256 chips as ("data", "model") = (16, 16).
+Multi-pod:  512 chips as ("pod", "data", "model") = (2, 16, 16) — the pod
+axis carries pure data parallelism (per-pod parameter replicas, gradient
+sync over ICI/DCN, optionally roaring-compressed via repro.grad_comp).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU tests (requires >= data*model host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

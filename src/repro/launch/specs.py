@@ -1,0 +1,225 @@
+"""Cell builders: (architecture x input shape x mesh) -> a jit-able step
+function + ShapeDtypeStruct inputs + shardings. No device allocation happens
+here (everything flows through ``jax.eval_shape``)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.distributed import sharding as sh
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adafactor, adamw, cosine_schedule
+from repro.train import make_train_step
+
+GIANT_PARAM_THRESHOLD = 50e9          # above this: adafactor (factored stats)
+ENC_FRAMES = 256                      # audio stub frames (whisper)
+VIS_TOKENS = 64                       # vision stub patches (qwen2-vl)
+
+# --- perf-experiment knobs (EXPERIMENTS.md SPerf); baselines leave them unset
+import os as _os
+
+def _sharding_mode(cfg) -> str:
+    """auto | replicate. REPRO_SHARDING_MODE overrides; 'replicate' is the
+    pure-DP layout for small models (whisper hillclimb)."""
+    env = _os.environ.get("REPRO_SHARDING_MODE")
+    if env:
+        return env
+    return "auto"
+
+
+def _long_window() -> int | None:
+    """REPRO_LONG_WINDOW=<tokens>: roaring sliding-window + sink active set
+    for long_500k decode (the serving layer's page table keeps only the
+    window plus global-sink pages live; see serve/kv_cache.py)."""
+    v = _os.environ.get("REPRO_LONG_WINDOW")
+    return int(v) if v else None
+
+
+def pick_optimizer(cfg: ModelConfig):
+    lr = cosine_schedule(3e-4, warmup=2000, total=100_000)
+    if cfg.param_count() > GIANT_PARAM_THRESHOLD:
+        return adafactor(lr)
+    return adamw(lr)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the given cell.
+
+    train:   {tokens, mask[, extra_embeds][, memory]}
+    prefill: {tokens[, extra_embeds][, memory]}
+    decode:  {tokens (B,1), pos (B,)[, memory]}  (+ caches, built separately)
+    """
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    out: dict[str, Any] = {}
+    if spec.kind == "train":
+        out["tokens"] = _sds((B, S + 1), jnp.int32)
+        out["mask"] = _sds((B, S + 1), jnp.float32)
+    elif spec.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        out["tokens"] = _sds((B, 1), jnp.int32)
+        out["pos"] = _sds((B,), jnp.int32)
+    if cfg.frontend == "vision" and spec.kind == "train":
+        out["extra_embeds"] = _sds((B, VIS_TOKENS, cfg.d_model), jnp.bfloat16)
+    if cfg.layer_pattern == "encdec":
+        out["memory"] = _sds((B, ENC_FRAMES, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _batch_shardings(batch_sds: dict, mesh: Mesh, mode: str = "auto"):
+    bspec = sh.batch_spec(mesh, mode)
+    out = {}
+    for k, v in batch_sds.items():
+        dims = [None] * len(v.shape)
+        if v.shape and v.shape[0] > 1:
+            dims[0] = bspec[0] if len(bspec) else None
+        out[k] = NamedSharding(mesh, P(*dims))
+    return out
+
+
+def cache_shardings(caches_sds, mesh: Mesh, long: bool = False):
+    """Decode caches: batch over data axes; heads (or head_dim when the KV
+    head count doesn't divide the model axis) over 'model'; long-context
+    caches shard the sequence dimension over 'data' (sequence parallelism)."""
+    model_n = mesh.shape["model"]
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data_n = int(np.prod([mesh.shape[a] for a in data_axes]))
+    batch_axes = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def spec_for(path, leaf):
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = str(p.key)
+                break
+        shp = leaf.shape
+        def div(i, n):
+            return shp[i] % n == 0 and shp[i] >= n
+        if key in ("k", "v"):                 # [n_sb, B, S, KVH, hd]
+            if long and div(2, data_n * model_n):
+                # long-context: shard the sequence over BOTH axes. Sharding
+                # head_dim on 'model' instead forces a per-layer all-gather
+                # of the KV cache over the model axis (134 MB x 80 layers on
+                # qwen2@524k); with S fully sharded, attention reduces to
+                # shard-local partial softmax + KB-scale all-reduces.
+                return P(None, None, (*data_axes, "model"), None, None)
+            heads = "model" if div(3, model_n) else None
+            hd = "model" if heads is None and div(4, model_n) else None
+            if long and div(2, data_n):
+                return P(None, None, batch_axes, heads, hd)
+            b = batch_axes if div(1, data_n) else None
+            return P(None, b, None, heads, hd)
+        if key == "conv":                      # [n_sb, B, K-1, di]
+            b = batch_axes if div(1, data_n) else None
+            return P(None, b, None, "model" if div(3, model_n) else None)
+        if key == "h":                         # [n_sb, B, di, st]
+            b = batch_axes if div(1, data_n) else None
+            if b is None and div(2, data_n * model_n):
+                return P(None, None, (*data_axes, "model"), None)
+            return P(None, b, "model" if div(2, model_n) else None, None)
+        if key == "S":                         # [n_sb, B, H, hd, hd]
+            b = batch_axes if div(1, data_n) else None
+            return P(None, b, "model" if div(2, model_n) else None, None, None)
+        if key in ("x_tm", "x_cm"):            # [n_sb, B, d]
+            b = batch_axes if div(1, data_n) else None
+            return P(None, b, "model" if div(2, model_n) else None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for(path, leaf)),
+        caches_sds)
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh):
+    """Returns (fn, args_sds tuple, in_shardings tuple, donate_argnums,
+    meta dict). ``jax.jit(fn, in_shardings=..., donate_argnums=...)
+    .lower(*args_sds).compile()`` is the dry-run contract."""
+    cfg = get_config(arch)
+    if _os.environ.get("REPRO_PARAM_DTYPE"):
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, param_dtype=_os.environ["REPRO_PARAM_DTYPE"])
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    mode = _sharding_mode(cfg)
+    batch_sds = input_specs(arch, shape)
+    batch_sh = _batch_shardings(batch_sds, mesh, mode)
+    rng = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda: T.init_lm(rng, cfg))
+    params_sh = sh.params_shardings(params_sds, mesh, mode)
+    meta = {"arch": arch, "shape": shape, "kind": spec.kind,
+            "seq_len": S, "global_batch": B,
+            "n_superblocks": cfg.n_superblocks,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+
+    if spec.kind == "train":
+        opt = pick_optimizer(cfg)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_sh = sh.params_shardings(opt_sds, mesh, mode)  # mirrors params
+        state_sds = {"params": params_sds, "opt": opt_sds,
+                     "step": _sds((), jnp.int32)}
+        state_sh = {"params": params_sh, "opt": opt_sh,
+                    "step": NamedSharding(mesh, P())}
+        # gradient accumulation for wide models: keep ~2 sequences per data
+        # shard per microstep so layer-scan carries fit HBM (80 x [B_loc, S,
+        # d] bf16 at d=8192 is 86 GB/device without it)
+        daxes = [a for a in ("pod", "data") if a in mesh.shape]
+        dcount = int(np.prod([mesh.shape[a] for a in daxes]))
+        micro = None
+        if cfg.d_model >= 4096:
+            micro = max(dcount * 2 // (1 if cfg.d_model < 8000 else 2),
+                        dcount)
+            while B % micro:
+                micro //= 2
+        if _os.environ.get("REPRO_MICROBATCH"):
+            micro = int(_os.environ["REPRO_MICROBATCH"]) or None
+        step = make_train_step(cfg, opt, remat="full", microbatch=micro)
+        meta["optimizer"] = opt.name
+        meta["microbatch"] = micro
+        return (step, (state_sds, batch_sds), (state_sh, batch_sh), (0,), meta)
+
+    if spec.kind == "prefill":
+        def prefill(params, batch):
+            logits, _ = T.forward(params, batch["tokens"], cfg,
+                                  extra_embeds=batch.get("extra_embeds"),
+                                  memory=batch.get("memory"))
+            return logits
+        return (prefill, (params_sds, batch_sds), (params_sh, batch_sh),
+                (), meta)
+
+    # decode: serve_step over a dense KV/state cache of seq_len tokens
+    long = S >= (1 << 19)
+    S_cache = S
+    if long and _long_window() and all(
+            k.startswith("attn") for k in cfg.block_kinds()):
+        # roaring active-set decode: window + global-sink pages only (the
+        # page table evicts the rest via ANDNOT); cache shrinks accordingly
+        S_cache = min(S, _long_window())
+        meta["long_window"] = S_cache
+    caches_sds = jax.eval_shape(
+        lambda: T.init_decode_caches(cfg, B, s_max=S_cache))
+    caches_sh = cache_shardings(caches_sds, mesh, long=long)
+    memory = batch_sds.get("memory")
+
+    def serve_step(params, caches, batch):
+        logits, new_caches = T.decode_step(
+            params, caches, batch["tokens"], batch["pos"], cfg,
+            memory=batch.get("memory"))
+        return logits, new_caches
+
+    return (serve_step, (params_sds, caches_sds, batch_sds),
+            (params_sh, caches_sh, batch_sh), (1,), meta)

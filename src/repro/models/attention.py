@@ -1,0 +1,320 @@
+"""GQA attention with dense, sliding-window, and roaring block-sparse modes.
+
+The roaring path consumes packed block lists produced by
+``repro.sparsity.compile_mask`` — at train time through
+``kernels.sparse_attn.sparse_attention`` (Pallas on TPU, reference math under
+jit on CPU/dry-run), at decode time through the roaring-paged KV cache in
+``repro.serve``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sparse_attn import sparse_attention
+from . import common
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, cfg: ModelConfig, dtype) -> dict:
+    d, hd, H, KVH = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": common.dense_init(ks[0], (d, H, hd), dtype),
+        "wk": common.dense_init(ks[1], (d, KVH, hd), dtype),
+        "wv": common.dense_init(ks[2], (d, KVH, hd), dtype),
+        "wo": common.dense_init(ks[3], (H, hd, d), dtype),
+    }
+    # logical axes: wq/wk/wv ("embed","heads","head_dim"), wo ("heads","head_dim","embed")
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+        q = common.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = common.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _block_mask(qi, kj, block, row_off, causal, window):
+    rows = (qi * block + jnp.arange(block))[:, None] + row_off
+    cols = (kj * block + jnp.arange(block))[None, :]
+    mask = jnp.ones((block, block), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    return mask
+
+
+def _block_scores(qb, kb, scale, softcap, qi, kj, block, row_off, causal,
+                  window):
+    """Returns (masked softcapped scores s, raw tanh t for bwd)."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb) * scale
+    t = None
+    if softcap is not None:
+        t = jnp.tanh(s / softcap)
+        s = softcap * t
+    mask = _block_mask(qi, kj, block, row_off, causal, window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    return s, t
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, scale, softcap, causal, window, block):
+    out, _ = _flash_fwd_impl(q, k, v, scale, softcap, causal, window, block)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, scale, softcap, causal, window, block):
+    """q: [B,S,KVH,G,hd] f32; k,v: [B,S_kv,KVH,hd] f32 -> (out, lse)."""
+    B, S, KVH, G, hd = q.shape
+    S_kv = k.shape[1]
+    nq, nk = S // block, S_kv // block
+    qr = q.reshape(B, nq, block, KVH, G, hd)
+    kr = k.reshape(B, nk, block, KVH, hd)
+    vr = v.reshape(B, nk, block, KVH, hd)
+    row_off = S_kv - S
+
+    def q_step(_, qi):
+        qb = jax.lax.dynamic_index_in_dim(qr, qi, axis=1, keepdims=False)
+
+        def kv_step(acc, kj):
+            m, l, o = acc
+            kb = jax.lax.dynamic_index_in_dim(kr, kj, axis=1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, kj, axis=1, keepdims=False)
+            s, _ = _block_scores(qb, kb, scale, softcap, qi, kj, block,
+                                 row_off, causal, window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            o = o * alpha + jnp.einsum("bkgqs,bskd->bkgqd", p, vb)
+            return (m_new, l, o), None
+
+        m0 = jnp.full((B, KVH, G, block, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, block, 1), jnp.float32)
+        o0 = jnp.zeros((B, KVH, G, block, hd), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk))
+        l_safe = jnp.maximum(l, 1e-30)
+        return None, (o / l_safe, m + jnp.log(l_safe))   # out, lse per row
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # outs: [nq, B, KVH, G, block, hd] -> [B, S, KVH, G, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, KVH, G, hd)
+    lse = lses[..., 0].transpose(1, 0, 4, 2, 3).reshape(B, S, KVH, G)
+    return out, lse
+
+
+def _flash_vjp_fwd(q, k, v, scale, softcap, causal, window, block):
+    out, lse = _flash_fwd_impl(q, k, v, scale, softcap, causal, window, block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(scale, softcap, causal, window, block, res, do):
+    """Flash backward with blockwise recompute: residuals are only (o, lse)
+    per row — no [nq, nk, bq, bk] score tensors survive the forward."""
+    q, k, v, out, lse = res
+    B, S, KVH, G, hd = q.shape
+    S_kv = k.shape[1]
+    nq, nk = S // block, S_kv // block
+    row_off = S_kv - S
+    qr = q.reshape(B, nq, block, KVH, G, hd)
+    kr = k.reshape(B, nk, block, KVH, hd)
+    vr = v.reshape(B, nk, block, KVH, hd)
+    dor = do.reshape(B, nq, block, KVH, G, hd).astype(jnp.float32)
+    lser = lse.reshape(B, nq, block, KVH, G)
+    # D_i = do_i . o_i  (per row)
+    D = jnp.sum(do.astype(jnp.float32) * out, axis=-1) \
+        .reshape(B, nq, block, KVH, G)
+
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry
+        qb = jax.lax.dynamic_index_in_dim(qr, qi, axis=1, keepdims=False)
+        dob = jax.lax.dynamic_index_in_dim(dor, qi, axis=1, keepdims=False)
+        lseb = jax.lax.dynamic_index_in_dim(lser, qi, axis=1, keepdims=False)
+        Db = jax.lax.dynamic_index_in_dim(D, qi, axis=1, keepdims=False)
+        # [B, block, KVH, G] -> [B, KVH, G, block]
+        lse_t = lseb.transpose(0, 2, 3, 1)
+        D_t = Db.transpose(0, 2, 3, 1)
+
+        def kv_step(acc, kj):
+            dq_b, dk_acc, dv_acc = acc
+            kb = jax.lax.dynamic_index_in_dim(kr, kj, axis=1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, kj, axis=1, keepdims=False)
+            s, t = _block_scores(qb, kb, scale, softcap, qi, kj, block,
+                                 row_off, causal, window)
+            p = jnp.exp(s - lse_t[..., None])            # [B,KVH,G,bq,bk]
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", dob, vb)
+            dv_blk = jnp.einsum("bkgqs,bqkgd->bskd", p, dob)
+            ds = p * (dp - D_t[..., None])
+            if softcap is not None:
+                ds = ds * (1.0 - t * t)
+            ds = ds * scale
+            dq_b = dq_b + jnp.einsum("bkgqs,bskd->bqkgd", ds, kb)
+            dk_blk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qb)
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(
+                    dk_acc, kj * block, block, axis=1) + dk_blk,
+                kj * block, axis=1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(
+                    dv_acc, kj * block, block, axis=1) + dv_blk,
+                kj * block, axis=1)
+            return (dq_b, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((B, block, KVH, G, hd), jnp.float32)
+        (dq_b, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((B, S_kv, KVH, hd), jnp.float32)
+    dv0 = jnp.zeros((B, S_kv, KVH, hd), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KVH, G, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attn_jnp(q, k, v, cfg: ModelConfig, *, causal: bool,
+                   window: Optional[int] = None, block: int = 512) -> jax.Array:
+    """Blocked online-softmax attention in pure jnp (O(S) memory), with a
+    flash-style custom VJP (blockwise recompute; residuals are (o, lse)).
+
+    The reference formulation lowered by the dry-run for long sequences —
+    same math as the Pallas kernel, expressed for XLA.
+    q: [B,S,H,hd]; k,v: [B,S_kv,KVH,hd].
+    """
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = hd ** -0.5
+    qf = q.reshape(B, S, KVH, G, hd).astype(jnp.float32)
+    out = _flash(qf, k.astype(jnp.float32), v.astype(jnp.float32), scale,
+                 cfg.attn_softcap, causal, window, block)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _dense_attn(q, k, v, cfg: ModelConfig, *, causal: bool,
+                window: Optional[int] = None) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,S_kv,KVH,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    S_kv, KVH = k.shape[1], k.shape[2]
+    if S >= 2048 and S_kv >= 2048 and S % 512 == 0 and S_kv % 512 == 0:
+        return flash_attn_jnp(q, k, v, cfg, causal=causal, window=window)
+    group = H // KVH
+    scale = hd ** -0.5
+    qg = q.reshape(B, S, KVH, group, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cfg.attn_softcap is not None:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    rows = jnp.arange(S)[:, None] + (S_kv - S)      # align ends (decode-friendly)
+    cols = jnp.arange(S_kv)[None, :]
+    mask = jnp.ones((S, S_kv), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention(params: dict, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, layer_kind: str = "attn_mlp",
+              block_lists=None, causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    ``block_lists``: optional (kv_idx, counts) roaring-extracted block lists;
+    when provided and ``cfg.attn_impl == 'sparse'``, the block-sparse path is
+    used (this is how long-context cells stay sub-quadratic).
+    """
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    local = "local" in layer_kind
+    if cfg.attn_impl == "sparse" and block_lists is not None and not local:
+        kv_idx, counts = block_lists
+        out = sparse_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), kv_idx, counts,
+            cfg.sparse_block, cfg.sparse_block, causal, cfg.attn_softcap,
+            None, False)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        out = _dense_attn(q, k, v, cfg, causal=causal,
+                          window=cfg.window if local else None)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def attention_decode(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array, layer_kind: str = "attn_mlp"):
+    """Single-token decode against a dense KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, KVH, hd]; pos: i32[B] current index.
+    Returns (out [B,1,d], new_cache_k, new_cache_v). The roaring-paged cache
+    variant lives in repro.serve (kernels.sparse_attn.paged_decode).
+    """
+    B, _, d = x.shape
+    positions = pos[:, None]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    cache_k = jax.vmap(
+        lambda c, kk, p: jax.lax.dynamic_update_slice_in_dim(c, kk, p, axis=0)
+    )(cache_k, k.astype(cache_k.dtype), pos)
+    cache_v = jax.vmap(lambda c, vv, p: jax.lax.dynamic_update_slice_in_dim(c, vv, p, axis=0)
+                       )(cache_v, v.astype(cache_v.dtype), pos)
+    S_max, KVH = cache_k.shape[1], cache_k.shape[2]
+    H, hd = q.shape[2], q.shape[3]
+    group = H // KVH
+    scale = hd ** -0.5
+    # sequence-parallel long-context decode: keep scores sharded along the
+    # cache's sequence dim so softmax/PV combine shard-local partials with
+    # tiny all-reduces instead of all-gathering the KV cache (11.5 GB/step
+    # per device on qwen2-72b@524k before this constraint; see §Perf)
+    seq_parallel = S_max >= (1 << 17)
+    from repro.distributed import context as dctx
+    qg = q.reshape(B, KVH, group, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) * scale
+    if seq_parallel:
+        s = dctx.constrain(s, (None, None, None, "all"))
+    if cfg.attn_softcap is not None:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    cols = jnp.arange(S_max)[None, :]
+    live = cols <= pos[:, None]
+    if "local" in layer_kind:
+        live &= cols > (pos[:, None] - cfg.window)
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if seq_parallel:
+        p = dctx.constrain(p, (None, None, None, "all"))
+    out = jnp.einsum("bkgs,bskd->bkgd", p, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    return (jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype)),
+            cache_k, cache_v)
+
+
+def cross_attention(params: dict, x: jax.Array, memory: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Encoder-decoder cross attention (whisper): q from x, k/v from memory."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"].astype(x.dtype))
+    out = _dense_attn(q, k, v, cfg, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))

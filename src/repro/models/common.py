@@ -1,0 +1,120 @@
+"""Shared model components: norms, embeddings, RoPE/M-RoPE, initializers.
+
+Plain-pytree style: params are nested dicts of jax.Arrays; every component is
+an ``init(rng, ...) -> params`` plus a pure ``apply(params, x) -> y``.
+Logical sharding axes are attached via ``repro.distributed.sharding`` at
+pjit time (names documented per initializer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(rng, shape, scale, dtype):
+    stddev = scale / max(1.0, np.sqrt(shape[0] if len(shape) > 1 else 1.0))
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def rms_norm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layer_norm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = ((x - mu) * jax.lax.rsqrt(var + eps)
+           * params["scale"].astype(jnp.float32)
+           + params["bias"].astype(jnp.float32))
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------- rotary embeddings
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, n_heads, head_dim]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)      # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs    # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Sequence[int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head_dim/2 frequency slots are split into
+    (t, h, w) sections, each rotated by its own position stream.
+
+    x: [..., S, H, hd]; positions: [..., S, 3] (text-only inputs pass the same
+    value in all three streams, recovering 1-D RoPE exactly).
+    """
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)      # [hd/2]
+    sec = np.asarray(sections)
+    assert sec.sum() == hd // 2, (sections, hd)
+    stream_id = jnp.asarray(np.repeat(np.arange(3), sec), jnp.int32)  # [hd/2]
+    pos = jnp.take(positions.astype(jnp.float32), stream_id, axis=-1)  # [..., S, hd/2]
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+
+def embedding_init(rng, vocab: int, d: int, dtype,
+                   vocab_padded: Optional[int] = None) -> dict:
+    vp = vocab_padded or vocab
+    return {"table": truncated_normal_init(rng, (vp, d), 1.0, dtype)}
+    # logical axes: ("vocab"->model, "embed")
+
+
+def embed(params: dict, tokens: jax.Array, scale_by_sqrt_dim: bool = False) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    if scale_by_sqrt_dim:
+        out = out * np.sqrt(out.shape[-1]).astype(out.dtype)
+    return out
+
+
+def unembed(params: dict, x: jax.Array, softcap: Optional[float] = None,
+            vocab: Optional[int] = None) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x, params["table"])
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    vp = params["table"].shape[0]
+    if vocab is not None and vocab < vp:
+        # padded vocab slots never win the softmax
+        pad = jnp.arange(vp) >= vocab
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits
+
+
+def dense_init(rng, shape, dtype, scale: float = 1.0) -> jax.Array:
+    return truncated_normal_init(rng, shape, scale, dtype)

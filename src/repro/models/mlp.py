@@ -1,0 +1,136 @@
+"""Gated MLP (SwiGLU/GeGLU) and capacity-based MoE.
+
+The MoE uses the TPU-idiomatic dispatch/combine-einsum formulation
+(Mesh-TF/GShard style): tokens are routed to (expert, capacity-slot) pairs,
+expert FFNs run as one batched einsum over the expert dimension (MXU-dense),
+and results are combined with the routing weights. Dropped tokens (capacity
+overflow) pass through the residual stream, as usual.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from .config import ModelConfig
+
+
+def mlp_init(rng, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {
+        "wi": common.dense_init(ks[0], (d, f), dtype),
+        "wo": common.dense_init(ks[2], (f, d), dtype),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = common.dense_init(ks[1], (d, f), dtype)
+    return p
+    # logical axes: wi/wg ("embed","mlp"), wo ("mlp","embed")
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    if "wg" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))
+
+
+def moe_init(rng, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 4)
+    return {
+        "router": common.dense_init(ks[0], (d, e), jnp.float32),
+        "wi": common.dense_init(ks[1], (e, d, f), dtype),
+        "wg": common.dense_init(ks[2], (e, d, f), dtype),
+        "wo": common.dense_init(ks[3], (e, f, d), dtype),
+    }
+    # logical axes: wi/wg ("expert","embed","mlp"), wo ("expert","mlp","embed")
+
+
+def moe(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Returns (output, aux_loss). x: [B, S, d].
+
+    Scatter-based dispatch with *per-data-shard grouping*: tokens are grouped
+    by their data-parallel shard (dim 0 of the batch is batch-major, so
+    groups align with shards), each group computes capacity slots with a
+    group-local exclusive cumsum (no cross-shard sequential dependency), and
+    expert buffers are [G, E, C_local, d] sharded (data, model, ., .) —
+    dispatch stays shard-local, expert FFNs run expert-parallel over the
+    model axis (one batched einsum, MXU-dense). Overflowing pairs are
+    dropped (capacity-factor semantics) and ride the residual stream.
+    """
+    from repro.distributed import context as dctx
+
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    G = dctx.data_shard_count()
+    if B % G != 0:                  # grouping must align with batch sharding
+        G = 1
+    NG = N // G
+    C = max(1, int(np.ceil(cfg.capacity_factor * NG * K / E)))
+    xf = x.reshape(N, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)       # [N, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                        # [E]
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # group-local capacity slots: exclusive cumsum inside each data shard
+    eg = gate_idx.reshape(G, NG * K)                    # expert id per pair
+    onehot = jax.nn.one_hot(eg, E, dtype=jnp.int32)     # [G, NG*K, E]
+    slot = jnp.cumsum(onehot, axis=1) - onehot
+    slot = jnp.sum(slot * onehot, axis=-1)              # [G, NG*K]
+    keep = slot < C
+    gates = (gate_vals.reshape(G, NG * K)
+             * keep.astype(gate_vals.dtype))            # dropped -> 0
+    xg = xf.reshape(G, NG, d)
+    tok = jnp.repeat(jnp.arange(NG), K)                 # token id per pair
+
+    def dispatch_one(xg_i, e_i, s_i, keep_i):
+        e_idx = jnp.where(keep_i, e_i, E)               # OOB -> dropped
+        s_idx = jnp.minimum(s_i, C - 1)
+        return jnp.zeros((E, C, d), xg_i.dtype).at[e_idx, s_idx].add(
+            xg_i[tok], mode="drop")
+
+    expert_in = jax.vmap(dispatch_one)(xg, eg, slot, keep)   # [G, E, C, d]
+    expert_in = dctx.constrain(expert_in, ("data", "model", None, None))
+
+    import os as _os
+    wi, wg, wo = (params["wi"].astype(xf.dtype),
+                  params["wg"].astype(xf.dtype),
+                  params["wo"].astype(xf.dtype))
+    if _os.environ.get("REPRO_MOE_GATHER"):
+        # explicit per-layer weight gather (bf16, once) so the expert
+        # einsums run shard-local: without this, XLA resolves the
+        # (G-on-data x f-on-data) einsum conflict by all-gathering the
+        # [G,E,C,f] activations in f32 — 4 GB/layer/microstep on jamba
+        # (EXPERIMENTS.md §Perf)
+        wi = dctx.constrain(wi, ("model", None, None))
+        wg = dctx.constrain(wg, ("model", None, None))
+        wo = dctx.constrain(wo, ("model", None, None))
+
+    h = jnp.einsum("gecd,edf->gecf", expert_in, wi)
+    g = jnp.einsum("gecd,edf->gecf", expert_in, wg)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xf.dtype) * h
+    expert_out = jnp.einsum("gecf,efd->gecd", h, wo)
+    expert_out = dctx.constrain(expert_out, ("data", "model", None, None))
+
+    def combine_one(eo_i, e_i, s_i, gates_i):
+        per_pair = eo_i[jnp.minimum(e_i, E - 1), jnp.minimum(s_i, C - 1)]
+        per_pair = per_pair * gates_i[:, None].astype(per_pair.dtype)
+        return jnp.zeros((NG, d), per_pair.dtype).at[tok].add(per_pair)
+
+    out = jax.vmap(combine_one)(expert_out, eg, slot, gates)  # [G, NG, d]
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,136 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: per-head state S in R^{hd x hd} evolves as
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,     y_t = (r_t S_t)
+with w_t a *data-dependent* decay (the Finch novelty) and a bonus term u for
+the current token. Train path scans over time; decode is a single-step
+recurrence (O(1) per token — this is why the rwkv6 cell runs ``long_500k``
+natively).
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+token-shift uses a plain previous-token mix (no LoRA on the mix coefficients)
+and the decay LoRA is a single dense layer. Shapes and dataflow match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from .config import ModelConfig
+from .scan_utils import chunked_scan
+
+HEAD_DIM = 64
+
+
+def rwkv_init(rng, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    H = d // HEAD_DIM
+    f = cfg.d_ff
+    ks = jax.random.split(rng, 10)
+    return {
+        "wr": common.dense_init(ks[0], (d, d), dtype),
+        "wk": common.dense_init(ks[1], (d, d), dtype),
+        "wv": common.dense_init(ks[2], (d, d), dtype),
+        "wg": common.dense_init(ks[3], (d, d), dtype),
+        "wo": common.dense_init(ks[4], (d, d), dtype),
+        "w_decay": common.dense_init(ks[5], (d, d), dtype, scale=0.1),
+        "decay_bias": jnp.full((d,), -6.0, jnp.float32),
+        "bonus_u": jnp.zeros((H, HEAD_DIM), jnp.float32),
+        "mix": jnp.full((5, d), 0.5, jnp.float32),       # r,k,v,g,w token-shift
+        "ln_x": common.layer_norm_init(d, jnp.float32),
+        "cwi": common.dense_init(ks[6], (d, f), dtype),
+        "cwo": common.dense_init(ks[7], (f, d), dtype),
+        "cmix": jnp.full((1, d), 0.5, jnp.float32),
+    }
+
+
+def _time_shift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def _mix(x, xprev, coeff):
+    return x * coeff + xprev * (1.0 - coeff)
+
+
+def rwkv_time_mix(params, x, cfg: ModelConfig):
+    B, L, d = x.shape
+    H = d // HEAD_DIM
+    xp = _time_shift(x)
+    mr, mk, mv, mg, mw = [params["mix"][i].astype(x.dtype) for i in range(5)]
+    r = jnp.einsum("bld,de->ble", _mix(x, xp, mr), params["wr"].astype(x.dtype))
+    k = jnp.einsum("bld,de->ble", _mix(x, xp, mk), params["wk"].astype(x.dtype))
+    v = jnp.einsum("bld,de->ble", _mix(x, xp, mv), params["wv"].astype(x.dtype))
+    g = jnp.einsum("bld,de->ble", _mix(x, xp, mg), params["wg"].astype(x.dtype))
+    wdec = jnp.einsum("bld,de->ble", _mix(x, xp, mw),
+                      params["w_decay"].astype(x.dtype))
+    # data-dependent decay in (0,1): exp(-exp(bias + lora))
+    w = jnp.exp(-jnp.exp(params["decay_bias"] + wdec.astype(jnp.float32)))
+
+    r = r.reshape(B, L, H, HEAD_DIM).astype(jnp.float32)
+    k = k.reshape(B, L, H, HEAD_DIM).astype(jnp.float32)
+    v = v.reshape(B, L, H, HEAD_DIM).astype(jnp.float32)
+    w = w.reshape(B, L, H, HEAD_DIM)
+    u = params["bonus_u"]
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                      # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]   # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((B, H, HEAD_DIM, HEAD_DIM), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    _, ys = chunked_scan(step, S0, xs)        # checkpointed chunks (memory)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L, d)
+    y = common.layer_norm(params["ln_x"], y)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).reshape(B, L, d)
+    return jnp.einsum("bld,de->ble", y.astype(x.dtype),
+                      params["wo"].astype(x.dtype))
+
+
+def rwkv_channel_mix(params, x, cfg: ModelConfig):
+    xp = _time_shift(x)
+    xm = _mix(x, xp, params["cmix"][0].astype(x.dtype))
+    h = jnp.einsum("bld,df->blf", xm, params["cwi"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("blf,fd->bld", h, params["cwo"].astype(x.dtype))
+
+
+def rwkv_decode_step(params, x, state, cfg: ModelConfig):
+    """x: [B,1,d]; state: (x_prev_tm [B,d], S [B,H,hd,hd], x_prev_cm [B,d])."""
+    B, _, d = x.shape
+    H = d // HEAD_DIM
+    x_tm, S, x_cm = state
+    xp = x_tm[:, None, :]
+    mr, mk, mv, mg, mw = [params["mix"][i].astype(x.dtype) for i in range(5)]
+    r = jnp.einsum("bld,de->ble", _mix(x, xp, mr), params["wr"].astype(x.dtype))
+    k = jnp.einsum("bld,de->ble", _mix(x, xp, mk), params["wk"].astype(x.dtype))
+    v = jnp.einsum("bld,de->ble", _mix(x, xp, mv), params["wv"].astype(x.dtype))
+    g = jnp.einsum("bld,de->ble", _mix(x, xp, mg), params["wg"].astype(x.dtype))
+    wdec = jnp.einsum("bld,de->ble", _mix(x, xp, mw),
+                      params["w_decay"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp(params["decay_bias"] + wdec.astype(jnp.float32)))
+    r = r.reshape(B, H, HEAD_DIM).astype(jnp.float32)
+    k = k.reshape(B, H, HEAD_DIM).astype(jnp.float32)
+    v = v.reshape(B, H, HEAD_DIM).astype(jnp.float32)
+    w = w.reshape(B, H, HEAD_DIM)
+    u = params["bonus_u"]
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, S + u[None, :, :, None] * kv)
+    S = w[..., :, None] * S + kv
+    y = common.layer_norm(params["ln_x"], y.reshape(B, 1, d))
+    y = y * jax.nn.silu(g.astype(jnp.float32)).reshape(B, 1, d)
+    out_tm = jnp.einsum("bld,de->ble", y.astype(x.dtype),
+                        params["wo"].astype(x.dtype))
+    return out_tm, (x[:, 0, :], S, x_cm)
+
+
+def rwkv_channel_mix_step(params, x, x_prev, cfg: ModelConfig):
+    xm = _mix(x, x_prev[:, None, :], params["cmix"][0].astype(x.dtype))
+    h = jnp.einsum("bld,df->blf", xm, params["cwi"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("blf,fd->bld", h, params["cwo"].astype(x.dtype)), x[:, 0, :]

@@ -1,0 +1,38 @@
+"""Chunked sequence scan with per-chunk recomputation.
+
+``lax.scan``'s backward stores the carried state for every step — for a
+selective-SSM layer at 4k tokens that is seq_len x [B, d_inner, d_state]
+floats (~68 GB/layer on jamba). Splitting the scan into checkpointed chunks
+stores one carry per *chunk* and recomputes the inner steps in the backward
+pass: memory drops by the chunk factor for ~2x scan FLOPs (the standard
+recurrent-training trade).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(f, init, xs, chunk_size: int = 256):
+    """Drop-in for ``lax.scan(f, init, xs)`` over the leading time axis.
+
+    Falls back to a plain scan when the sequence is short or indivisible.
+    """
+    leaves = jax.tree.leaves(xs)
+    T = leaves[0].shape[0]
+    if T <= chunk_size or T % chunk_size != 0:
+        return jax.lax.scan(f, init, xs)
+    n_chunks = T // chunk_size
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(n_chunks, chunk_size, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, xc):
+        carry, ys = jax.lax.scan(f, carry, xc)
+        return carry, ys
+
+    carry, ys_c = jax.lax.scan(outer, init, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape(n_chunks * chunk_size, *a.shape[2:]), ys_c)
+    return carry, ys

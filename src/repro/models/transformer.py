@@ -1,0 +1,381 @@
+"""Unified LM: every assigned architecture is a layer-pattern over sub-blocks.
+
+Layers are stacked per *super-block* and iterated with ``lax.scan`` so the
+lowered HLO stays compact (an 80-layer model compiles as one while-loop over
+10-40 super-blocks — essential for dry-running 80 cells on a CPU container).
+
+Supports: dense GQA decoders, gemma2 local/global alternation with softcaps,
+MoE (uniform or alternating), jamba's 7:1 mamba:attention hybrid with MoE,
+RWKV6, whisper enc-dec (audio frontend stub), and qwen2-vl (vision stub,
+M-RoPE). Decode paths expose per-layer caches (KV, conv/ssm state, rwkv
+state) for the serving layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import context as dctx
+
+from . import attention as attn_mod
+from . import common, mlp as mlp_mod, rwkv as rwkv_mod, ssm as ssm_mod
+from .config import ModelConfig
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# =============================================================================
+# init
+# =============================================================================
+
+def _sublayer_init(rng, kind: str, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    if kind == "rwkv":
+        return {"ln1": common.rms_norm_init(d, jnp.float32),
+                "tm": rwkv_mod.rwkv_init(ks[0], cfg, dtype),
+                "ln2": common.rms_norm_init(d, jnp.float32)}
+    p = {"ln1": common.rms_norm_init(d, jnp.float32),
+         "ln2": common.rms_norm_init(d, jnp.float32)}
+    if kind.startswith("attn"):
+        p["attn"] = attn_mod.attn_init(ks[0], cfg, dtype)
+    elif kind.startswith("mamba"):
+        p["mamba"] = ssm_mod.mamba_init(ks[0], cfg, dtype)
+    if kind.endswith("_moe"):
+        p["moe"] = mlp_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_mod.mlp_init(ks[1], cfg, dtype)
+    return p
+
+
+def init_lm(rng, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg.param_dtype)
+    kinds = cfg.block_kinds()
+    n_sb = cfg.n_superblocks
+    keys = jax.random.split(rng, len(kinds) + 4)
+    params: dict[str, Any] = {
+        "embed": common.embedding_init(keys[-1], cfg.vocab, cfg.d_model, dtype,
+                                       vocab_padded=cfg.vocab_padded),
+        "final_norm": common.rms_norm_init(cfg.d_model, jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"table": common.dense_init(
+            keys[-2], (cfg.vocab_padded, cfg.d_model), dtype)}
+
+    def stack_init(rng, kind):
+        def one(r):
+            return _sublayer_init(r, kind, cfg, dtype)
+        return jax.vmap(one)(jax.random.split(rng, n_sb))
+
+    params["blocks"] = [stack_init(keys[j], kinds[j]) for j in range(len(kinds))]
+
+    if cfg.layer_pattern == "encdec":
+        enc_keys = jax.random.split(keys[-3], 2)
+        def enc_one(r):
+            return _sublayer_init(r, "attn_mlp", cfg, dtype)
+        params["encoder"] = jax.vmap(enc_one)(
+            jax.random.split(enc_keys[0], cfg.n_enc_layers))
+        params["enc_norm"] = common.rms_norm_init(cfg.d_model, jnp.float32)
+        def xattn_one(r):
+            return {"ln": common.rms_norm_init(cfg.d_model, jnp.float32),
+                    "xattn": attn_mod.attn_init(r, cfg, dtype)}
+        params["cross"] = jax.vmap(xattn_one)(
+            jax.random.split(enc_keys[1], n_sb))
+    return params
+
+
+# =============================================================================
+# forward (training / prefill)
+# =============================================================================
+
+def _apply_sublayer(p, x, kind, cfg: ModelConfig, positions, block_lists):
+    aux = jnp.float32(0.0)
+    h = common.rms_norm(p["ln1"], x)
+    if kind == "rwkv":
+        x = x + rwkv_mod.rwkv_time_mix(p["tm"], h, cfg)
+        h2 = common.rms_norm(p["ln2"], x)
+        x = x + rwkv_mod.rwkv_channel_mix(p["tm"], h2, cfg)
+        return x, aux
+    if kind.startswith("attn"):
+        x = x + attn_mod.attention(p["attn"], h, cfg, positions=positions,
+                                   layer_kind=kind, block_lists=block_lists)
+    elif kind.startswith("mamba"):
+        x = x + ssm_mod.mamba(p["mamba"], h, cfg)
+    h2 = common.rms_norm(p["ln2"], x)
+    if kind.endswith("_moe"):
+        out, aux = mlp_mod.moe(p["moe"], h2, cfg)
+        x = x + out
+    else:
+        x = x + mlp_mod.mlp(p["mlp"], h2)
+    return x, aux
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            block_lists=None, extra_embeds: Optional[jax.Array] = None,
+            memory: Optional[jax.Array] = None, remat: str = "none"):
+    """tokens: i32[B, S] -> (logits [B, S, V], aux_loss).
+
+    ``extra_embeds``: precomputed modality embeddings ([B, S_m, d]) prepended
+    to the token stream (vision/audio stubs). ``memory``: encoder output for
+    enc-dec models. ``remat``: "none" | "full" | "dots" — checkpointing is
+    applied at the *scan body* (per super-block), the only placement that
+    keeps per-layer residuals out of the backward while-loop state.
+    """
+    cdt = _dtype(cfg.compute_dtype)
+    x = common.embed(params["embed"], tokens).astype(cdt)
+    if cfg.logit_softcap is not None:           # gemma-style sqrt(d) scaling
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kinds = cfg.block_kinds()
+
+    def body(carry, layer_params):
+        x, aux = carry
+        # barrier: stop XLA from hoisting the first rms_norm's f32 upcast
+        # into the scan's saved carry (bf16 residuals, not f32 — ~6 GB on
+        # jamba train; see EXPERIMENTS.md §Perf)
+        x = jax.lax.optimization_barrier(x)
+        x = dctx.constrain_batch(x)             # anchor batch sharding
+        if cfg.layer_pattern == "encdec":
+            layer_params, cross_p = layer_params
+        for j, kind in enumerate(kinds):
+            x, a = _apply_sublayer(layer_params[j], x, kind, cfg,
+                                   positions, block_lists)
+            aux = aux + a
+        if cfg.layer_pattern == "encdec" and memory is not None:
+            h = common.rms_norm(cross_p["ln"], x)
+            x = x + attn_mod.cross_attention(cross_p["xattn"], h, memory, cfg)
+        return (dctx.constrain_batch(x), aux), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    xs = params["blocks"]
+    if cfg.layer_pattern == "encdec":
+        xs = (params["blocks"], params["cross"])
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    x = common.rms_norm(params["final_norm"], x)
+    table = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = common.unembed(table, x, softcap=cfg.logit_softcap,
+                            vocab=cfg.vocab)
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1]:, :]
+    return logits, aux
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = frames.astype(cdt)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, layer_params):
+        h = common.rms_norm(layer_params["ln1"], x)
+        x = x + attn_mod.attention(layer_params["attn"], h, cfg,
+                                   positions=positions, causal=False)
+        h2 = common.rms_norm(layer_params["ln2"], x)
+        x = x + mlp_mod.mlp(layer_params["mlp"], h2)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return common.rms_norm(params["enc_norm"], x)
+
+
+def lm_loss(params: dict, tokens: jax.Array, labels: jax.Array,
+            cfg: ModelConfig, block_lists=None, extra_embeds=None,
+            memory=None, aux_weight: float = 0.01):
+    logits, aux = forward(params, tokens, cfg, block_lists=block_lists,
+                          extra_embeds=extra_embeds, memory=memory)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll) + aux_weight * aux
+
+
+# =============================================================================
+# decode (single token)
+# =============================================================================
+
+def init_decode_caches(cfg: ModelConfig, batch: int, s_max: int) -> list:
+    """Per-superblock-position stacked caches."""
+    cdt = _dtype(cfg.compute_dtype)
+    n_sb = cfg.n_superblocks
+    d, hd, KVH = cfg.d_model, cfg.hd, cfg.n_kv_heads
+    di, st = cfg.ssm_expand * d, cfg.ssm_state
+    H_rwkv = d // rwkv_mod.HEAD_DIM
+    caches = []
+    for kind in cfg.block_kinds():
+        if kind.startswith("attn"):
+            caches.append({
+                "k": jnp.zeros((n_sb, batch, s_max, KVH, hd), cdt),
+                "v": jnp.zeros((n_sb, batch, s_max, KVH, hd), cdt)})
+        elif kind.startswith("mamba"):
+            caches.append({
+                "conv": jnp.zeros((n_sb, batch, cfg.ssm_conv - 1, di), cdt),
+                "h": jnp.zeros((n_sb, batch, di, st), jnp.float32)})
+        elif kind == "rwkv":
+            caches.append({
+                "x_tm": jnp.zeros((n_sb, batch, d), cdt),
+                "S": jnp.zeros((n_sb, batch, H_rwkv, rwkv_mod.HEAD_DIM,
+                                rwkv_mod.HEAD_DIM), jnp.float32),
+                "x_cm": jnp.zeros((n_sb, batch, d), cdt)})
+        else:
+            raise ValueError(kind)
+    return caches
+
+
+def decode_step(params: dict, caches: list, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig, memory: Optional[jax.Array] = None):
+    """tokens: i32[B, 1]; pos: i32[B] -> (logits [B, 1, V], new caches)."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = common.embed(params["embed"], tokens).astype(cdt)
+    if cfg.logit_softcap is not None:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    kinds = cfg.block_kinds()
+
+    def body(carry, scanned):
+        x = carry
+        if cfg.layer_pattern == "encdec":
+            layer_params, cross_p, layer_caches = scanned
+        else:
+            (layer_params, layer_caches), cross_p = scanned, None
+        new_caches = []
+        for j, kind in enumerate(kinds):
+            p, c = layer_params[j], layer_caches[j]
+            h = common.rms_norm(p["ln1"], x)
+            if kind.startswith("attn"):
+                out, nk, nv = attn_mod.attention_decode(
+                    p["attn"], h, cfg, cache_k=c["k"], cache_v=c["v"],
+                    pos=pos, layer_kind=kind)
+                x = x + out
+                new_caches.append({"k": nk, "v": nv})
+            elif kind.startswith("mamba"):
+                out, (nc, nh) = ssm_mod.mamba_decode_step(
+                    p["mamba"], h, (c["conv"], c["h"]), cfg)
+                x = x + out
+                new_caches.append({"conv": nc, "h": nh})
+            elif kind == "rwkv":
+                out, (x_tm, S, _) = rwkv_mod.rwkv_decode_step(
+                    p["tm"], h, (c["x_tm"], c["S"], c["x_cm"]), cfg)
+                x = x + out
+                h2 = common.rms_norm(p["ln2"], x)
+                cm_out, x_cm = rwkv_mod.rwkv_channel_mix_step(
+                    p["tm"], h2, c["x_cm"], cfg)
+                x = x + cm_out
+                new_caches.append({"x_tm": x_tm, "S": S, "x_cm": x_cm})
+                continue
+            h2 = common.rms_norm(p["ln2"], x)
+            if kind.endswith("_moe"):
+                out, _ = mlp_mod.moe(p["moe"], h2, cfg)
+                x = x + out
+            else:
+                x = x + mlp_mod.mlp(p["mlp"], h2)
+        if cfg.layer_pattern == "encdec" and memory is not None:
+            h = common.rms_norm(cross_p["ln"], x)
+            x = x + attn_mod.cross_attention(cross_p["xattn"], h, memory, cfg)
+        return x, new_caches
+
+    if cfg.layer_pattern == "encdec":
+        xs = (params["blocks"], params["cross"], caches)
+    else:
+        xs = (params["blocks"], caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = common.rms_norm(params["final_norm"], x)
+    table = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = common.unembed(table, x, softcap=cfg.logit_softcap,
+                            vocab=cfg.vocab)
+    return logits, new_caches
+
+
+# =============================================================================
+# decode against the roaring-paged KV cache (serving path)
+# =============================================================================
+
+def init_paged_caches(cfg: ModelConfig, n_pages: int, page_size: int) -> list:
+    """Per-superblock-position stacked page pools (attention kinds only)."""
+    cdt = _dtype(cfg.compute_dtype)
+    n_sb = cfg.n_superblocks
+    hd, KVH = cfg.hd, cfg.n_kv_heads
+    pools = []
+    for kind in cfg.block_kinds():
+        assert kind.startswith("attn"), (
+            "paged decode supports attention-only patterns; use decode_step "
+            f"for {cfg.layer_pattern}")
+        pools.append({
+            "k": jnp.zeros((n_sb, n_pages, page_size, KVH, hd), cdt),
+            "v": jnp.zeros((n_sb, n_pages, page_size, KVH, hd), cdt)})
+    return pools
+
+
+def decode_step_paged(params: dict, pools: list, tokens: jax.Array,
+                      pos: jax.Array, page_idx: jax.Array, counts: jax.Array,
+                      lengths: jax.Array, cfg: ModelConfig,
+                      use_pallas: bool = False):
+    """Decode one token against roaring-paged KV pools.
+
+    tokens: i32[B,1]; pos: i32[B]; page_idx: i32[B, max_pages] physical page
+    list per sequence (from RoaringPageTable.gather_lists); counts/lengths:
+    i32[B]. Returns (logits, new_pools).
+    """
+    from repro.kernels.sparse_attn import paged_decode
+
+    cdt = _dtype(cfg.compute_dtype)
+    x = common.embed(params["embed"], tokens).astype(cdt)
+    if cfg.logit_softcap is not None:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    kinds = cfg.block_kinds()
+    B = tokens.shape[0]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KVH
+    page_size = pools[0]["k"].shape[2]
+    # physical page + in-page offset where this token's KV lands
+    logical = pos // page_size
+    phys = jax.vmap(lambda pi, l: pi[l])(page_idx, logical)     # [B]
+    offs = pos % page_size
+
+    def body(x, scanned):
+        layer_params, layer_pools = scanned
+        new_pools = []
+        for j, kind in enumerate(kinds):
+            p, pool = layer_params[j], layer_pools[j]
+            h = common.rms_norm(p["ln1"], x)
+            q, k, v = attn_mod._project_qkv(p["attn"], h, cfg, pos[:, None])
+            pk = pool["k"].at[phys, offs].set(k[:, 0].astype(pool["k"].dtype))
+            pv = pool["v"].at[phys, offs].set(v[:, 0].astype(pool["v"].dtype))
+            qg = q.reshape(B, KVH, G, hd)
+            starts = (jnp.maximum(pos + 1 - cfg.window, 0)
+                      if "local" in kind else jnp.zeros_like(pos))
+            out = paged_decode(qg, pk, pv, page_idx, counts, lengths + 1,
+                               starts, softcap=cfg.attn_softcap,
+                               use_pallas=use_pallas)
+            out = out.reshape(B, 1, H * hd).reshape(B, 1, H, hd)
+            x = x + jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype),
+                               p["attn"]["wo"].astype(x.dtype))
+            new_pools.append({"k": pk, "v": pv})
+            h2 = common.rms_norm(p["ln2"], x)
+            if kind.endswith("_moe"):
+                out2, _ = mlp_mod.moe(p["moe"], h2, cfg)
+                x = x + out2
+            else:
+                x = x + mlp_mod.mlp(p["mlp"], h2)
+        return x, new_pools
+
+    x, new_pools = jax.lax.scan(body, x, (params["blocks"], pools))
+    x = common.rms_norm(params["final_norm"], x)
+    table = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = common.unembed(table, x, softcap=cfg.logit_softcap,
+                            vocab=cfg.vocab)
+    return logits, new_pools

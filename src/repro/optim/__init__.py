@@ -1,0 +1,5 @@
+from .optimizers import (adamw, adafactor, adamw8bit, OptimizerDef,
+                         cosine_schedule, clip_by_global_norm)
+
+__all__ = ["adamw", "adafactor", "adamw8bit", "OptimizerDef",
+           "cosine_schedule", "clip_by_global_norm"]

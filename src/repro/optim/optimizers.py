@@ -1,0 +1,225 @@
+"""Optimizers implemented from scratch (no optax in this container).
+
+  * ``adamw``      — fused AdamW with decoupled weight decay.
+  * ``adafactor``  — factored second moments (Shazeer & Stern): the TPU
+    giant-model default; optimizer state for a [n, m] matrix is n + m floats
+    instead of 2nm — what lets the 398B/400B cells fit 16 GB/chip at 256
+    chips (napkin math in EXPERIMENTS.md §Dry-run).
+  * ``adamw8bit``  — block-wise dynamically-quantized Adam states (256-value
+    lookup against per-block absmax), the distributed-memory trick for dense
+    giants when factored stats are not wanted.
+
+All follow one protocol:
+    init(params)                  -> opt_state
+    update(grads, state, params)  -> (updates, new_state)
+and updates are *subtracted* from params by the trainer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerDef:
+    init: Callable
+    update: Callable          # (grads, state, params, step) -> (updates, state)
+    name: str = "opt"
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# =============================================================================
+# AdamW
+# =============================================================================
+
+def adamw(lr: Callable | float, b1=0.9, b2=0.95, eps=1e-8, wd=0.1) -> OptimizerDef:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            u = lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                        + wd * p.astype(jnp.float32))
+            return u.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    return OptimizerDef(init, update, "adamw")
+
+
+# =============================================================================
+# Adafactor (factored second moments)
+# =============================================================================
+
+def adafactor(lr: Callable | float, eps=1e-30, clip_thresh=1.0,
+              decay_pow=0.8, min_dim_factored=8) -> OptimizerDef:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(p):
+        # factor whenever the trailing 2-D tile is non-trivial: a stacked
+        # [layers, d, H, hd] attention weight factors per (H x hd) tile; the
+        # unfactored fallback would keep a full-f32 second moment (21 GB on
+        # qwen2-vl's wq alone)
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored
+                and p.shape[-1] * p.shape[-2] >= 4096)
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_pow)
+        lr_t = lr_fn(step)
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                v_est = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                u = g * jax.lax.rsqrt(v_est + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS of update <= clip_thresh)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            return (lr_t * u).astype(p.dtype), new_s
+
+        flat = jax.tree_util.tree_map_with_path(
+            lambda path, g, s, p: one(g, s, p), grads, state, params,
+            is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))
+        updates = jax.tree.map(lambda o: o[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda o: o[1], flat,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return updates, new_state
+
+    return OptimizerDef(init, update, "adafactor")
+
+
+# =============================================================================
+# 8-bit AdamW (block-wise dynamic quantization of m and v)
+# =============================================================================
+
+_QBLOCK = 256
+
+
+def _quantize(x: jax.Array, power: float = 2.0):
+    """Block-wise absmax int8 quantization with a power-law code.
+
+    Linear absmax codes zero out entries below absmax/127, which explodes
+    Adam's ``m/sqrt(v)`` when v underflows. The power-law code
+    ``q = round(127 * (|x|/absmax)^(1/power))`` concentrates resolution near
+    zero (dynamic range (1/127)^power), the same idea as bitsandbytes'
+    dynamic map.
+    """
+    xb = x.reshape(-1, _QBLOCK)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12)
+    frac = jnp.abs(xb) / scale
+    q = jnp.round(127.0 * frac ** (1.0 / power)) * jnp.sign(xb)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, power: float = 2.0):
+    qb = q.reshape(-1, _QBLOCK).astype(jnp.float32)
+    frac = (jnp.abs(qb) / 127.0) ** power
+    return (jnp.sign(qb) * frac * scale[:, None]).reshape(-1)
+
+
+def adamw8bit(lr: Callable | float, b1=0.9, b2=0.95, eps=1e-8, wd=0.1) -> OptimizerDef:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _pad(n):
+        return (n + _QBLOCK - 1) // _QBLOCK * _QBLOCK
+
+    def init(params):
+        def one(p):
+            n = _pad(p.size)
+            return {"mq": jnp.zeros((n,), jnp.int8),
+                    "ms": jnp.zeros((n // _QBLOCK,), jnp.float32),
+                    "vq": jnp.zeros((n,), jnp.int8),
+                    "vs": jnp.zeros((n // _QBLOCK,), jnp.float32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def one(g, s, p):
+            n = _pad(p.size)
+            gf = jnp.pad(g.astype(jnp.float32).reshape(-1), (0, n - p.size))
+            m = _dequantize(s["mq"], s["ms"], power=2.0)
+            v = _dequantize(s["vq"], s["vs"], power=4.0)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            u = (lr_t * (mhat / (jnp.sqrt(vhat) + eps)))[: p.size].reshape(p.shape)
+            u = u + lr_t * wd * p.astype(jnp.float32)
+            mq, ms = _quantize(m, power=2.0)
+            vq, vs = _quantize(v, power=4.0)
+            return u.astype(p.dtype), {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+
+        flat = jax.tree.map(one, grads, state, params,
+                            is_leaf=lambda x: isinstance(x, dict) and "mq" in x)
+        updates = jax.tree.map(lambda o: o[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda o: o[1], flat,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return updates, new_state
+
+    return OptimizerDef(init, update, "adamw8bit")

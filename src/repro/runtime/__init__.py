@@ -1,0 +1,6 @@
+from .fault_tolerance import (ResilientTrainer, HeartbeatMonitor,
+                              StragglerPolicy, simulate_failure)
+from .elastic import elastic_remesh, reshard_tree
+
+__all__ = ["ResilientTrainer", "HeartbeatMonitor", "StragglerPolicy",
+           "simulate_failure", "elastic_remesh", "reshard_tree"]

@@ -1,0 +1,48 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and re-shard.
+
+On a real fleet, losing a pod (or scaling one in) changes the device set;
+the recovery path is: (1) rebuild a mesh over the surviving devices with the
+same logical axis names, (2) re-apply the sharding rules (they are logical,
+so they re-resolve against the new mesh shape — `_prune` drops axes that no
+longer divide), (3) `jax.device_put` the restored checkpoint onto the new
+shardings. Data parallel batch size follows the new "data" axis size; the
+data pipeline's shard count is updated accordingly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import params_shardings
+
+
+def elastic_remesh(axis_names: Sequence[str],
+                   devices: Optional[list] = None,
+                   model_parallel: int = 1) -> Mesh:
+    """Build the largest mesh with the given axes from available devices.
+
+    Keeps the model axis fixed (parameter layout must still fit) and absorbs
+    device loss on the data axis — the standard elastic-DP policy.
+    """
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    assert n % model_parallel == 0, (n, model_parallel)
+    data = n // model_parallel
+    if len(axis_names) == 2:
+        shape = (data, model_parallel)
+    elif len(axis_names) == 3:
+        shape = (1, data, model_parallel)
+    else:
+        raise ValueError(axis_names)
+    dev_array = np.asarray(devices[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(dev_array, tuple(axis_names))
+
+
+def reshard_tree(tree, mesh: Mesh):
+    """Re-apply logical sharding rules against a (possibly new) mesh."""
+    sh = params_shardings(tree, mesh)
+    return jax.tree.map(jax.device_put, tree, sh)

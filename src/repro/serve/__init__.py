@@ -1,0 +1,4 @@
+from .kv_cache import RoaringPageTable, PagedKVCache
+from .engine import ServeEngine, Request
+
+__all__ = ["RoaringPageTable", "PagedKVCache", "ServeEngine", "Request"]

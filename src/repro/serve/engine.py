@@ -1,0 +1,146 @@
+"""Batched serving engine with continuous batching over the roaring-paged KV
+cache.
+
+Flow: requests enter a queue; each engine step (1) admits new requests into
+free batch slots, allocating pages from the RoaringPageTable, (2) runs one
+jit'd ``decode_step_paged`` over the active batch, (3) retires finished
+sequences, returning their pages via Roaring OR into the free bitmap.
+
+Prefill is chunk-free token-streaming through the same decode path (adequate
+for the test scale; the 32k-prefill *shape* cells lower the one-shot
+``forward`` path instead — see launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+from .kv_cache import RoaringPageTable
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                       # i32[prompt_len]
+    max_new_tokens: int = 16
+    eos_id: int = -1                         # -1: never stop early
+    generated: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 n_pages: int = 256, page_size: int = 16,
+                 max_pages_per_seq: int = 32, greedy: bool = True):
+        assert all(k.startswith("attn") for k in cfg.block_kinds()), (
+            "paged engine supports attention-pattern archs; ssm/hybrid decode "
+            "uses state caches via T.decode_step")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.max_pages = max_pages_per_seq
+        self.table = RoaringPageTable(n_pages, page_size)
+        self.pools = T.init_paged_caches(cfg, n_pages, page_size)
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.slots: List[Optional[int]] = [None] * max_batch
+        self.pos: Dict[int, int] = {}
+        self._step_fn = jax.jit(
+            lambda params, pools, tok, pos, pidx, cnt, lens: T.decode_step_paged(
+                params, pools, tok, pos, pidx, cnt, lens, cfg))
+        self.greedy = greedy
+        self.steps_run = 0
+
+    def submit(self, req: Request) -> None:
+        req.generated = []
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req.req_id
+                self.active[req.req_id] = req
+                self.pos[req.req_id] = 0
+        # prefill admitted sequences token by token
+        for i, rid in enumerate(self.slots):
+            if rid is None:
+                continue
+            req = self.active[rid]
+            while self.pos[rid] < len(req.prompt) - 1:
+                self._advance(i, int(req.prompt[self.pos[rid]]), sample=False)
+
+    def _batch_arrays(self):
+        B = self.max_batch
+        page_idx = np.zeros((B, self.max_pages), np.int32)
+        counts = np.zeros((B,), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        for i, rid in enumerate(self.slots):
+            if rid is None:
+                continue
+            pi, cn, ln = self.table.gather_lists([rid], self.max_pages)
+            page_idx[i], counts[i], lengths[i] = pi[0], cn[0], ln[0]
+            pos[i] = self.pos[rid]
+        return page_idx, counts, lengths, pos
+
+    def _advance(self, slot: int, token: int, sample: bool) -> Optional[int]:
+        """Feed `token` for the sequence in `slot`; optionally return the
+        sampled next token. Other slots decode their own pending tokens too
+        (continuous batching: one jit step serves the whole batch)."""
+        rid = self.slots[slot]
+        self.table.alloc(rid, 1)
+        page_idx, counts, lengths, pos = self._batch_arrays()
+        tok = np.zeros((self.max_batch, 1), np.int32)
+        tok[slot, 0] = token
+        lengths = np.maximum(lengths - 1, 0)     # decode adds the new token
+        logits, self.pools = self._step_fn(
+            self.params, self.pools, jnp.asarray(tok), jnp.asarray(pos),
+            jnp.asarray(page_idx), jnp.asarray(counts), jnp.asarray(lengths))
+        self.pos[rid] += 1
+        self.steps_run += 1
+        if sample:
+            row = np.asarray(logits[slot, 0], np.float32)
+            return int(np.argmax(row))
+        return None
+
+    def step(self) -> None:
+        """One continuous-batching iteration: admit, decode, retire."""
+        self._admit()
+        # batch one decode for every active sequence
+        page_ok = True
+        active_slots = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active_slots:
+            return
+        for i in active_slots:
+            rid = self.slots[i]
+            req = self.active[rid]
+            nxt_in = (int(req.prompt[-1]) if not req.generated
+                      else req.generated[-1])
+            out = self._advance(i, nxt_in, sample=True)
+            req.generated.append(out)
+            if (len(req.generated) >= req.max_new_tokens
+                    or out == req.eos_id):
+                req.done = True
+                self.table.release(rid)
+                self.slots[i] = None
+                del self.active[rid]
+                del self.pos[rid]
+
+    def run_until_done(self, max_steps: int = 1000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and not self.active:
+                return
+            self.step()
+
+    def utilization(self) -> float:
+        return self.table.utilization()

@@ -1,0 +1,113 @@
+"""Roaring-paged KV cache.
+
+The global page pool is a fixed tensor [P, page_size, KVH, hd] per layer.
+Bookkeeping is pure paper machinery:
+
+  * ``free``: RoaringBitmap of free physical pages — allocation pops from it,
+    release is a Roaring OR; fragmentation never hurts because the bitmap is
+    the allocator;
+  * per-sequence page lists stay *ordered* (logical order = list order); the
+    roaring set of pages in use per sequence supports O(containers) "how many
+    pages" (cardinality counters) and batched reclamation via ANDNOT;
+  * ``gather_lists`` packs the page ids into the scalar-prefetch arrays of
+    ``kernels.sparse_attn.paged_decode``.
+
+This is the serving-side mirror of what the paper's S3 access operations do
+for integer sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RoaringBitmap, union_many
+
+
+class RoaringPageTable:
+    """Host-side page allocator + per-sequence page lists."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.free = RoaringBitmap.from_sorted_unique(
+            np.arange(n_pages, dtype=np.int64))
+        self.seq_pages: Dict[int, List[int]] = {}
+        self.seq_len: Dict[int, int] = {}
+
+    # -- allocation ----------------------------------------------------------
+    def alloc(self, seq_id: int, n_tokens: int) -> List[int]:
+        """Ensure capacity for n_tokens more tokens; returns new page ids."""
+        cur = self.seq_len.get(seq_id, 0)
+        pages = self.seq_pages.setdefault(seq_id, [])
+        need = (cur + n_tokens + self.page_size - 1) // self.page_size
+        new = []
+        while len(pages) < need:
+            if len(self.free) == 0:
+                raise MemoryError("KV page pool exhausted")
+            p = self.free.select(0)            # paper S2 select: first free
+            self.free.remove(p)
+            pages.append(p)
+            new.append(p)
+        self.seq_len[seq_id] = cur + n_tokens
+        return new
+
+    def release(self, seq_id: int) -> None:
+        """Return a sequence's pages to the pool (Roaring OR)."""
+        pages = self.seq_pages.pop(seq_id, [])
+        self.seq_len.pop(seq_id, None)
+        if pages:
+            self.free.ior(RoaringBitmap.from_array(pages))
+
+    def used_bitmap(self) -> RoaringBitmap:
+        """All pages in use = many-way union (Alg. 4) of per-seq sets."""
+        sets = [RoaringBitmap.from_array(p) for p in self.seq_pages.values()]
+        if not sets:
+            return RoaringBitmap()
+        return union_many(sets)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.n_pages
+
+    # -- kernel metadata -------------------------------------------------------
+    def gather_lists(self, seq_ids: List[int], max_pages: int):
+        """(page_idx i32[B, max_pages], counts i32[B], lengths i32[B])."""
+        B = len(seq_ids)
+        page_idx = np.zeros((B, max_pages), np.int32)
+        counts = np.zeros((B,), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        for i, s in enumerate(seq_ids):
+            pages = self.seq_pages.get(s, [])
+            assert len(pages) <= max_pages, (s, len(pages), max_pages)
+            page_idx[i, : len(pages)] = pages
+            counts[i] = len(pages)
+            lengths[i] = self.seq_len.get(s, 0)
+        return page_idx, counts, lengths
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Device-side page pools for all layers: [L, P, page, KVH, hd] x (k, v)."""
+
+    k: jax.Array
+    v: jax.Array
+    page_size: int
+
+    @classmethod
+    def create(cls, n_layers: int, n_pages: int, page_size: int, kvh: int,
+               hd: int, dtype=jnp.bfloat16) -> "PagedKVCache":
+        shape = (n_layers, n_pages, page_size, kvh, hd)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), page_size)
+
+    def write_token(self, layer_slices_k, layer_slices_v, page_ids: jax.Array,
+                    offsets: jax.Array):
+        """Scatter one token's K/V ([L, B, KVH, hd]) into (page, offset)."""
+        k = self.k.at[:, page_ids, offsets].set(
+            layer_slices_k.astype(self.k.dtype))
+        v = self.v.at[:, page_ids, offsets].set(
+            layer_slices_v.astype(self.v.dtype))
+        return PagedKVCache(k, v, self.page_size)

@@ -1,0 +1,7 @@
+from .masks import (MaskBuilder, build_arch_mask, compile_mask,
+                    local_window_mask, global_stripe_mask, causal_mask,
+                    doc_boundary_mask, mask_density)
+
+__all__ = ["MaskBuilder", "build_arch_mask", "compile_mask",
+           "local_window_mask", "global_stripe_mask", "causal_mask",
+           "doc_boundary_mask", "mask_density"]

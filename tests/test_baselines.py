@@ -1,0 +1,115 @@
+"""Format-level tests for the WAH / Concise / BitSet baselines."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines import BitSet, ConciseBitmap, WahBitmap
+from repro.baselines._groups import (groups_to_indices, indices_to_groups)
+from repro.baselines.concise import decode_groups as concise_decode
+from repro.baselines.concise import encode_groups as concise_encode
+from repro.baselines.wah import decode_groups as wah_decode
+from repro.baselines.wah import encode_groups as wah_encode
+
+
+def _rand_set(n, universe, seed):
+    r = np.random.default_rng(seed)
+    return np.unique(r.integers(0, universe, size=n))
+
+
+def test_group_stream_roundtrip():
+    idx = _rand_set(1000, 1 << 20, 0)
+    np.testing.assert_array_equal(groups_to_indices(indices_to_groups(idx)), idx)
+
+
+@pytest.mark.parametrize("codec_enc,codec_dec", [
+    (wah_encode, wah_decode), (concise_encode, concise_decode)])
+def test_codec_roundtrip_random(codec_enc, codec_dec):
+    for seed in range(5):
+        idx = _rand_set(2000, 1 << 18, seed)
+        g = indices_to_groups(idx)
+        got = codec_dec(codec_enc(g))
+        np.testing.assert_array_equal(got, g)
+
+
+def test_codec_roundtrip_runs():
+    # long homogeneous runs of zeros and ones exercise fill splitting
+    idx = np.concatenate([
+        np.arange(0, 31 * 40),                 # ones run
+        np.asarray([31 * 50000 + 3]),          # long zero gap
+        np.arange(31 * 50010, 31 * 50200),     # another ones run
+    ]).astype(np.int64)
+    for cls in (WahBitmap, ConciseBitmap):
+        b = cls.from_sorted_unique(idx)
+        np.testing.assert_array_equal(b.to_array(), idx)
+
+
+def test_wah_worst_case_size_vs_concise():
+    """Paper S1: on {0, 62, 124, ...} WAH needs 64 bits/int, Concise 32."""
+    idx = np.arange(0, 62 * 10000, 62, dtype=np.int64)
+    wah = WahBitmap.from_sorted_unique(idx)
+    con = ConciseBitmap.from_sorted_unique(idx)
+    wah_bits = wah.size_in_bytes() * 8 / idx.size
+    con_bits = con.size_in_bytes() * 8 / idx.size
+    assert 63.5 <= wah_bits <= 64.5
+    assert 31.5 <= con_bits <= 32.5
+    # and Roaring halves Concise again (~16 bits/int), paper S1
+    from repro.core import RoaringBitmap
+    roar = RoaringBitmap.from_sorted_unique(idx)
+    assert roar.size_in_bytes() * 8 / idx.size < 17
+
+
+@pytest.mark.parametrize("cls", [WahBitmap, ConciseBitmap, BitSet])
+def test_ops_vs_sets(cls):
+    a = _rand_set(30000, 1 << 20, 1)
+    b = _rand_set(1000, 1 << 20, 2)
+    ba, bb = cls.from_sorted_unique(a), cls.from_sorted_unique(b)
+    sa, sb = set(a.tolist()), set(b.tolist())
+    np.testing.assert_array_equal(ba.and_(bb).to_array(), sorted(sa & sb))
+    np.testing.assert_array_equal(ba.or_(bb).to_array(), sorted(sa | sb))
+
+
+def test_wah_streaming_matches_expanded():
+    a = _rand_set(5000, 1 << 18, 3)
+    b = _rand_set(7000, 1 << 18, 4)
+    wa, wb = WahBitmap.from_sorted_unique(a), WahBitmap.from_sorted_unique(b)
+    got_and, touched = wa.and_streaming(wb)
+    np.testing.assert_array_equal(got_and.to_array(), wa.and_(wb).to_array())
+    assert touched > 0
+    got_or, _ = wa.or_streaming(wb)
+    np.testing.assert_array_equal(got_or.to_array(), wa.or_(wb).to_array())
+
+
+@pytest.mark.parametrize("cls", [WahBitmap, ConciseBitmap, BitSet])
+def test_append_and_remove(cls):
+    vals = sorted(set(np.random.default_rng(5).integers(0, 200000, 3000).tolist()))
+    b = cls.from_array(vals)
+    model = set(vals)
+    x = max(model)
+    for step in range(50):
+        x += 1 + (step * 37) % 400
+        b.append(x)
+        model.add(x)
+    np.testing.assert_array_equal(b.to_array(), sorted(model))
+    removals = list(model)[::97]
+    for x in removals:
+        b.remove(x)
+        model.discard(x)
+    np.testing.assert_array_equal(b.to_array(), sorted(model))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sets(st.integers(0, 1 << 16), max_size=400),
+       st.sets(st.integers(0, 1 << 16), max_size=400))
+def test_prop_baseline_ops(sa, sb):
+    for cls in (WahBitmap, ConciseBitmap):
+        ba, bb = cls.from_array(sa), cls.from_array(sb)
+        assert set(ba.and_(bb).to_array().tolist()) == (sa & sb)
+        assert set(ba.or_(bb).to_array().tolist()) == (sa | sb)
+
+
+def test_bitset_doubling_overhead_visible():
+    b = BitSet()
+    for x in range(0, 100000, 7):
+        b.add(x)
+    assert b.size_in_bytes() >= b.trimmed_size_in_bytes()

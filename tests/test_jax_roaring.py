@@ -1,0 +1,123 @@
+"""TPU-native RoaringSlab vs the paper-faithful py_roaring oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RoaringBitmap
+from repro.core import jax_roaring as jr
+
+# NOTE: deliberately no jax_enable_x64 here — a module-level config update
+# leaks into every other test module at pytest collection time. jax_roaring
+# is int32-safe (universes < 2^31) by design.
+
+
+def _slab(values, capacity=32, max_elems=1 << 15):
+    return jr.from_dense_array(np.asarray(sorted(values), dtype=np.int64),
+                               capacity, max_elems)
+
+
+def _values(slab, max_out=1 << 16):
+    idx, valid = jr.to_indices(slab, max_out)
+    return np.asarray(idx)[np.asarray(valid)]
+
+
+def _rand_set(n, universe, seed):
+    r = np.random.default_rng(seed)
+    return np.unique(r.integers(0, universe, size=n))
+
+
+# ------------------------------------------------------------------ roundtrip
+@pytest.mark.parametrize("n,universe", [(10, 1 << 8), (3000, 1 << 18),
+                                        (20000, 1 << 20), (9000, 1 << 14)])
+def test_roundtrip(n, universe):
+    vals = _rand_set(n, universe, seed=n)
+    slab = _slab(vals)
+    np.testing.assert_array_equal(_values(slab), vals)
+    assert int(slab.cardinality) == vals.size
+
+
+def test_container_kind_rules():
+    # 9000 values in one chunk -> bitmap container; 100 -> array container
+    dense = _slab(_rand_set(12000, jr.CHUNK_SIZE, 1))
+    assert int(dense.kind[0]) == jr.KIND_BITMAP
+    sparse = _slab(_rand_set(100, jr.CHUNK_SIZE, 2))
+    assert int(sparse.kind[0]) == jr.KIND_ARRAY
+    # exactly at threshold stays array (paper: > 4096 converts)
+    exact = _slab(np.arange(jr.ARRAY_MAX))
+    assert int(exact.kind[0]) == jr.KIND_ARRAY
+    over = _slab(np.arange(jr.ARRAY_MAX + 1))
+    assert int(over.kind[0]) == jr.KIND_BITMAP
+
+
+def test_row_bits_array_roundtrip():
+    vals = _rand_set(3000, jr.CHUNK_SIZE, 3).astype(np.uint16)
+    row = np.zeros(jr.ROW_WORDS, np.uint16)
+    row[: vals.size] = vals
+    bits = jr.row_array_to_bits(jnp.asarray(row), jnp.int32(vals.size))
+    back = jr.row_bits_to_array(bits)
+    np.testing.assert_array_equal(np.asarray(back)[: vals.size], vals)
+    assert int(jr.row_popcount(bits)) == vals.size
+
+
+# ------------------------------------------------------------------ membership
+def test_contains_and_rank():
+    vals = _rand_set(30000, 1 << 20, 4)
+    slab = _slab(vals, capacity=32, max_elems=1 << 16)
+    probes = np.random.default_rng(0).integers(0, 1 << 20, 500)
+    got = np.asarray(jr.contains(slab, jnp.asarray(probes)))
+    want = np.isin(probes, vals)
+    np.testing.assert_array_equal(got, want)
+    s = set(vals.tolist())
+    for p in probes[:20].tolist():
+        want_rank = sum(1 for v in s if v <= p)
+        assert int(jr.rank(slab, jnp.int64(p))) == want_rank
+
+
+# ------------------------------------------------------------------ set algebra
+@pytest.mark.parametrize("n1,n2,universe", [
+    (100, 80, 1 << 10),
+    (20000, 15000, 1 << 19),     # bitmap x bitmap chunks
+    (200, 30000, 1 << 18),       # array x bitmap mixes
+])
+def test_slab_ops_vs_oracle(n1, n2, universe):
+    a = _rand_set(n1, universe, 11)
+    b = _rand_set(n2, universe, 22)
+    sa, sb = _slab(a, 64), _slab(b, 64)
+    ra, rb = RoaringBitmap.from_sorted_unique(a), RoaringBitmap.from_sorted_unique(b)
+    np.testing.assert_array_equal(_values(jr.slab_and(sa, sb)), (ra & rb).to_array())
+    np.testing.assert_array_equal(_values(jr.slab_or(sa, sb)), (ra | rb).to_array())
+    np.testing.assert_array_equal(_values(jr.slab_xor(sa, sb)), (ra ^ rb).to_array())
+    np.testing.assert_array_equal(_values(jr.slab_andnot(sa, sb)),
+                                  ra.andnot(rb).to_array())
+    # cardinality counters maintained through ops (paper S2)
+    assert int(jr.slab_and(sa, sb).cardinality) == len(ra & rb)
+    assert int(jr.slab_or(sa, sb).cardinality) == len(ra | rb)
+
+
+def test_union_many_slabs():
+    sets = [_rand_set(5000, 1 << 18, 50 + i) for i in range(6)]
+    slabs = [_slab(s, 16) for s in sets]
+    got = _values(jr.union_many_slabs(slabs, capacity=32))
+    want = np.unique(np.concatenate(sets))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ops_are_jittable():
+    a, b = _rand_set(5000, 1 << 18, 1), _rand_set(800, 1 << 18, 2)
+    sa, sb = _slab(a, 16), _slab(b, 16)
+    f = jax.jit(lambda x, y: jr.slab_and(x, y, capacity=16).cardinality)
+    assert int(f(sa, sb)) == len(set(a.tolist()) & set(b.tolist()))
+
+
+# ------------------------------------------------------------------ properties
+@settings(max_examples=25, deadline=None)
+@given(st.sets(st.integers(0, (1 << 18) - 1), max_size=200),
+       st.sets(st.integers(0, (1 << 18) - 1), max_size=200))
+def test_prop_slab_matches_set_algebra(sa, sb):
+    xa, xb = _slab(sa, 16, 1 << 10), _slab(sb, 16, 1 << 10)
+    assert set(_values(jr.slab_and(xa, xb), 1 << 10).tolist()) == (sa & sb)
+    assert set(_values(jr.slab_or(xa, xb), 1 << 11).tolist()) == (sa | sb)
+    assert set(_values(jr.slab_andnot(xa, xb), 1 << 10).tolist()) == (sa - sb)

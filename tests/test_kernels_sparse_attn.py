@@ -1,0 +1,136 @@
+"""Roaring block-sparse flash attention kernel vs oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sparse_attn import kernel as K
+from repro.kernels.sparse_attn import ref as R
+from repro.kernels.sparse_attn import ops as O
+
+
+def _dense_oracle(q, k, v, causal, softcap=None, scale=None):
+    """Full dense attention (for full masks the sparse path must match)."""
+    B, H, S, D = q.shape
+    group = H // k.shape[1]
+    kf = jnp.repeat(k, group, axis=1)
+    vf = jnp.repeat(v, group, axis=1)
+    if scale is None:
+        scale = D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        m = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def _full_blocklist(num_qb, num_kvb, causal):
+    idx = np.zeros((num_qb, num_kvb), np.int32)
+    cnt = np.zeros((num_qb,), np.int32)
+    for r in range(num_qb):
+        cols = [c for c in range(num_kvb) if (not causal) or c <= r]
+        idx[r, : len(cols)] = cols
+        cnt[r] = len(cols)
+    return jnp.asarray(idx), jnp.asarray(cnt)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,S,D,causal", [
+    (1, 2, 2, 256, 64, True),
+    (2, 4, 2, 256, 128, True),     # GQA
+    (1, 2, 1, 384, 64, False),
+])
+def test_sparse_kernel_full_mask_matches_dense(B, H, KVH, S, D, causal, dtype):
+    rng = np.random.default_rng(0)
+    bq = bk = 128
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), dtype) * 0.3
+    k = jnp.asarray(rng.normal(size=(B, KVH, S, D)), dtype) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, KVH, S, D)), dtype)
+    kv_idx, counts = _full_blocklist(S // bq, S // bk, causal)
+    got = K.sparse_flash_attention(q, k, v, kv_idx, counts, block_q=bq,
+                                   block_kv=bk, causal=causal, interpret=True)
+    want = _dense_oracle(q, k, v, causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_sparse_kernel_sparse_mask_matches_ref(softcap):
+    rng = np.random.default_rng(1)
+    B, H, KVH, S, D = 1, 2, 2, 512, 64
+    bq = bk = 128
+    num_qb = S // bq
+    # roaring-style irregular mask: local window + a global stripe
+    idx = np.zeros((num_qb, num_qb), np.int32)
+    cnt = np.zeros((num_qb,), np.int32)
+    for r in range(num_qb):
+        cols = sorted(set([0] + [c for c in (r - 1, r) if c >= 0]))
+        idx[r, : len(cols)] = cols
+        cnt[r] = len(cols)
+    kv_idx, counts = jnp.asarray(idx), jnp.asarray(cnt)
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.normal(size=(B, KVH, S, D)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, KVH, S, D)), jnp.float32)
+    got = K.sparse_flash_attention(q, k, v, kv_idx, counts, block_q=bq,
+                                   block_kv=bk, causal=True, softcap=softcap,
+                                   interpret=True)
+    want = R.sparse_attention_ref(q, k, v, kv_idx, counts, block_q=bq,
+                                  block_kv=bk, causal=True, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_sparse_attention_grad_runs():
+    rng = np.random.default_rng(2)
+    B, H, S, D = 1, 2, 256, 64
+    bq = 128
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    kv_idx, counts = _full_blocklist(S // bq, S // bq, True)
+
+    def loss(q, k, v):
+        return jnp.sum(O.sparse_attention(q, k, v, kv_idx, counts, bq, bq,
+                                          True, None, None, False) ** 2)
+
+    g = jax.grad(loss)(q, k, v)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+@pytest.mark.parametrize("G,page", [(4, 64), (1, 128)])
+def test_paged_decode_kernel_vs_ref(G, page):
+    rng = np.random.default_rng(3)
+    B, KVH, D, P, maxp = 2, 2, 64, 16, 4
+    q = jnp.asarray(rng.normal(size=(B, KVH, G, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page, KVH, D)), jnp.float32) * 0.3
+    vp = jnp.asarray(rng.normal(size=(P, page, KVH, D)), jnp.float32)
+    page_idx = jnp.asarray([[3, 7, 1, 0], [5, 2, 0, 0]], jnp.int32)
+    counts = jnp.asarray([3, 2], jnp.int32)
+    lengths = jnp.asarray([2 * page + 17, page + 5], jnp.int32)
+    got = K.paged_decode_attention(q, kp, vp, page_idx, counts, lengths,
+                                   interpret=True)
+    want = R.paged_decode_ref(q, kp, vp, page_idx, counts, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_ignores_pages_beyond_count():
+    """Garbage physical ids past `counts` must not affect the output."""
+    rng = np.random.default_rng(4)
+    B, KVH, G, D, P, page, maxp = 1, 1, 2, 64, 8, 64, 4
+    q = jnp.asarray(rng.normal(size=(B, KVH, G, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page, KVH, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, KVH, D)), jnp.float32)
+    counts = jnp.asarray([2], jnp.int32)
+    lengths = jnp.asarray([page + 30], jnp.int32)
+    a = K.paged_decode_attention(q, kp, vp, jnp.asarray([[1, 4, 0, 0]], jnp.int32),
+                                 counts, lengths, interpret=True)
+    b = K.paged_decode_attention(q, kp, vp, jnp.asarray([[1, 4, 7, 6]], jnp.int32),
+                                 counts, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0, rtol=0)

@@ -1,0 +1,185 @@
+"""Unit + property tests: paper-faithful Roaring vs python set semantics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.py_roaring import (
+    ARRAY_MAX, CHUNK_SIZE, ArrayContainer, BitmapContainer, RoaringBitmap,
+    array_to_bitmap, bitmap_to_array, bitmap_to_array_faithful,
+    galloping_intersect_faithful, intersect_array_array,
+    intersect_bitmap_bitmap, union_array_array, union_bitmap_bitmap,
+    union_many,
+)
+
+rng = np.random.default_rng(0)
+
+
+def _rand_set(n, universe, seed):
+    r = np.random.default_rng(seed)
+    return np.unique(r.integers(0, universe, size=n))
+
+
+# ---------------------------------------------------------------- containers
+def test_container_type_rules_bulk_build():
+    # exactly 4096 -> array; 4097 -> bitmap (paper S2 threshold)
+    v = np.arange(4096, dtype=np.int64)
+    rb = RoaringBitmap.from_sorted_unique(v)
+    assert isinstance(rb.containers[0], ArrayContainer)
+    v = np.arange(4097, dtype=np.int64)
+    rb = RoaringBitmap.from_sorted_unique(v)
+    assert isinstance(rb.containers[0], BitmapContainer)
+
+
+def test_dynamic_conversion_on_add_and_remove():
+    rb = RoaringBitmap.from_array(range(4096))
+    assert isinstance(rb.containers[0], ArrayContainer)
+    rb.add(5000)
+    assert isinstance(rb.containers[0], BitmapContainer)  # exceeds 4096
+    rb.remove(5000)
+    assert isinstance(rb.containers[0], ArrayContainer)   # reaches 4096
+    assert rb.cardinality == 4096
+
+
+def test_bitmap_to_array_faithful_matches_vectorized():
+    words = rng.integers(0, 2**63, size=1024, dtype=np.uint64)
+    np.testing.assert_array_equal(bitmap_to_array(words),
+                                  bitmap_to_array_faithful(words))
+
+
+def test_array_bitmap_roundtrip():
+    arr = np.unique(rng.integers(0, CHUNK_SIZE, 3000)).astype(np.uint16)
+    np.testing.assert_array_equal(bitmap_to_array(array_to_bitmap(arr)), arr)
+
+
+def test_intersect_bitmap_bitmap_materializes_array_when_small():
+    a = BitmapContainer(array_to_bitmap(np.arange(0, 65536, 8, dtype=np.uint16)))
+    b = BitmapContainer(array_to_bitmap(np.arange(0, 65536, 13, dtype=np.uint16)))
+    c = intersect_bitmap_bitmap(a, b)
+    assert isinstance(c, ArrayContainer)       # |every 104th| = 631 <= 4096
+    np.testing.assert_array_equal(c.arr, np.arange(0, 65536, 104, dtype=np.uint16))
+
+
+def test_union_array_array_upgrade_rule():
+    a = ArrayContainer(np.arange(0, 8192, 2, dtype=np.uint16))      # 4096
+    b = ArrayContainer(np.arange(1, 8192, 2, dtype=np.uint16))      # 4096
+    c = union_array_array(a, b)
+    assert isinstance(c, BitmapContainer) and c.cardinality == 8192
+    # overlapping arrays whose true union stays <= 4096 must downgrade back
+    a = ArrayContainer(np.arange(3000, dtype=np.uint16))
+    b = ArrayContainer(np.arange(1500, 4000, dtype=np.uint16))
+    c = union_array_array(a, b)
+    assert isinstance(c, ArrayContainer) and c.cardinality == 4000
+
+
+def test_galloping_matches_merge():
+    small = np.unique(rng.integers(0, CHUNK_SIZE, 50)).astype(np.uint16)
+    large = np.unique(rng.integers(0, CHUNK_SIZE, 5000)).astype(np.uint16)
+    got = galloping_intersect_faithful(small, large)
+    want = intersect_array_array(ArrayContainer(small), ArrayContainer(large)).arr
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------------ bitmap ops
+@pytest.mark.parametrize("n1,n2,universe", [
+    (100, 100, 1 << 10), (5000, 200, 1 << 20), (100000, 100000, 1 << 22),
+    (300, 80000, 1 << 18),
+])
+def test_and_or_xor_andnot_vs_sets(n1, n2, universe):
+    a = _rand_set(n1, universe, 1)
+    b = _rand_set(n2, universe, 2)
+    ra, rbm = RoaringBitmap.from_sorted_unique(a), RoaringBitmap.from_sorted_unique(b)
+    sa, sb = set(a.tolist()), set(b.tolist())
+    np.testing.assert_array_equal((ra & rbm).to_array(), sorted(sa & sb))
+    np.testing.assert_array_equal((ra | rbm).to_array(), sorted(sa | sb))
+    np.testing.assert_array_equal((ra ^ rbm).to_array(), sorted(sa ^ sb))
+    np.testing.assert_array_equal(ra.andnot(rbm).to_array(), sorted(sa - sb))
+    assert (ra & rbm).cardinality == len(sa & sb)
+    assert (ra | rbm).cardinality == len(sa | sb)
+
+
+def test_inplace_union_matches_functional():
+    a = _rand_set(50000, 1 << 21, 3)
+    b = _rand_set(60000, 1 << 21, 4)
+    ra, rb = RoaringBitmap.from_sorted_unique(a), RoaringBitmap.from_sorted_unique(b)
+    want = (ra | rb).to_array()
+    ra.ior(rb)
+    np.testing.assert_array_equal(ra.to_array(), want)
+
+
+def test_union_many_matches_pairwise():
+    sets = [_rand_set(20000, 1 << 20, 10 + i) for i in range(8)]
+    rbs = [RoaringBitmap.from_sorted_unique(s) for s in sets]
+    got = union_many(rbs)
+    want = set()
+    for s in sets:
+        want |= set(s.tolist())
+    np.testing.assert_array_equal(got.to_array(), sorted(want))
+    assert got.cardinality == len(want)
+
+
+# ------------------------------------------------------------------ access ops
+def test_contains_add_remove_rank_select():
+    vals = _rand_set(5000, 1 << 20, 5)
+    rb = RoaringBitmap.from_sorted_unique(vals)
+    s = set(vals.tolist())
+    probes = rng.integers(0, 1 << 20, 2000)
+    for p in probes.tolist():
+        assert rb.contains(p) == (p in s)
+    # rank/select duality
+    arr = np.asarray(sorted(s))
+    for j in [0, 17, len(arr) // 2, len(arr) - 1]:
+        assert rb.select(j) == int(arr[j])
+        assert rb.rank(int(arr[j])) == j + 1
+
+
+def test_size_accounting_example_from_paper():
+    # first 1000 multiples of 62 -> one array container, ~16.2 bits/int (S2)
+    rb = RoaringBitmap.from_array([62 * i for i in range(1000)])
+    assert rb.container_stats() == (1, 0)
+    bits_per_int = rb.size_in_bytes() * 8 / 1000
+    assert 16 <= bits_per_int < 17
+    # all even numbers in [2*2^16, 3*2^16) -> one bitmap container (fig. 1)
+    rb2 = RoaringBitmap.from_array(range(2 * CHUNK_SIZE, 3 * CHUNK_SIZE, 2))
+    assert rb2.container_stats() == (0, 1)
+
+
+# --------------------------------------------------------------- property tests
+small_sets = st.sets(st.integers(0, 1 << 18), max_size=300)
+
+
+@settings(max_examples=60, deadline=None)
+@given(small_sets, small_sets)
+def test_prop_ops_match_set_algebra(sa, sb):
+    ra = RoaringBitmap.from_array(sa)
+    rb = RoaringBitmap.from_array(sb)
+    assert set((ra & rb).to_array().tolist()) == (sa & sb)
+    assert set((ra | rb).to_array().tolist()) == (sa | sb)
+    assert set((ra ^ rb).to_array().tolist()) == (sa ^ sb)
+    assert set(ra.andnot(rb).to_array().tolist()) == (sa - sb)
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_sets, st.lists(st.integers(0, 1 << 18), max_size=50))
+def test_prop_dynamic_updates(sa, updates):
+    ra = RoaringBitmap.from_array(sa)
+    model = set(sa)
+    for i, u in enumerate(updates):
+        if i % 2 == 0:
+            ra.add(u)
+            model.add(u)
+        else:
+            ra.remove(u)
+            model.discard(u)
+    assert set(ra.to_array().tolist()) == model
+    assert ra.cardinality == len(model)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sets(st.integers(0, CHUNK_SIZE * 3 - 1), min_size=0, max_size=5000))
+def test_prop_rank_select_roundtrip(s):
+    rb = RoaringBitmap.from_array(s)
+    arr = sorted(s)
+    for j in range(0, len(arr), max(1, len(arr) // 7)):
+        assert rb.select(j) == arr[j]
+        assert rb.rank(arr[j]) == j + 1
