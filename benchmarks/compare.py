@@ -1,0 +1,137 @@
+"""Perf regression gate: diff a fresh bench run against a checked-in baseline.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run --quick --sections dispatch,kernels
+    python -m benchmarks.compare [--baseline benchmarks/baselines/seed_bench.json]
+                                 [--fresh artifacts/bench.json]
+                                 [--threshold 1.5]
+
+Rows are matched by ``name``; a row is a regression when its us_per_call
+exceeds ``threshold`` x the baseline. Rows present on only one side are
+reported but never fail the gate (benchmarks grow over time). Exit code 1 on
+any regression, so CI / future perf PRs get a hard signal.
+
+Wall-clock numbers on shared CPU runners are noisy — the default threshold is
+deliberately loose (1.5x); it is a tripwire for order-of-magnitude mistakes
+(e.g. re-introducing the bitmap-domain tax), not a microbenchmark court.
+
+Cross-machine comparison of absolute microseconds is meaningless, so CI uses
+``--speedup-mode`` instead: it checks the *within-run* hybrid-vs-bitmap-domain
+speedup columns (derived), which only depend on the ratio measured on a single
+machine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in rows}
+
+
+def load_derived(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    out = {}
+    for r in rows:
+        try:
+            out[r["name"]] = float(r["derived"])
+        except (TypeError, ValueError):
+            pass
+    return out
+
+
+# within-run speedup rows that must hold on any machine (sparse/mixed A/B);
+# dense is excluded by construction — the two paths converge there
+SPEEDUP_ROWS = (
+    "kernels/dispatch_ab/sparse/hybrid_dispatch",
+    "kernels/dispatch_ab/mixed/hybrid_dispatch",
+    "dispatch_ab/d=2^-8/hybrid_dispatch",
+    "dispatch_ab/d=2^-4/hybrid_dispatch",
+)
+
+
+def check_speedups(fresh_path: str, floor: float) -> int:
+    """Machine-independent gate: each A/B row's derived column is the
+    hybrid-vs-bitmap-domain speedup measured *within one run on one
+    machine*, so it is meaningful on any runner class."""
+    derived = load_derived(fresh_path)
+    bad, seen = [], 0
+    for name in SPEEDUP_ROWS:
+        if name not in derived:
+            continue
+        seen += 1
+        ok = derived[name] >= floor
+        print(f"{name:55s} speedup {derived[name]:6.2f}x "
+              f"{'ok' if ok else '<-- BELOW FLOOR'}")
+        if not ok:
+            bad.append(name)
+    if seen == 0:
+        print("FAIL: no dispatch A/B rows in fresh run (wrong --sections?)",
+              file=sys.stderr)
+        return 1
+    if bad:
+        print(f"\nFAIL: {len(bad)} speedup(s) below {floor:.1f}x floor",
+              file=sys.stderr)
+        return 1
+    print(f"\nOK: {seen} within-run speedups >= {floor:.1f}x")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/baselines/seed_bench.json")
+    ap.add_argument("--fresh", default="artifacts/bench.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when fresh > threshold * baseline")
+    ap.add_argument("--speedup-mode", action="store_true",
+                    help="machine-independent gate on the within-run "
+                         "hybrid-vs-bitmap speedup columns (for CI, where "
+                         "absolute wall-clock vs a dev-machine baseline is "
+                         "meaningless)")
+    ap.add_argument("--min-speedup", type=float, default=2.0)
+    args = ap.parse_args()
+
+    if args.speedup_mode:
+        return check_speedups(args.fresh, args.min_speedup)
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    common = sorted(set(base) & set(fresh))
+    only_base = sorted(set(base) - set(fresh))
+    only_fresh = sorted(set(fresh) - set(base))
+
+    regressions = []
+    print(f"{'name':60s} {'base_us':>12s} {'fresh_us':>12s} {'ratio':>7s}")
+    for name in common:
+        b, f = base[name], fresh[name]
+        ratio = f / b if b > 0 else float("inf")
+        flag = " <-- REGRESSION" if ratio > args.threshold else ""
+        print(f"{name:60s} {b:12.1f} {f:12.1f} {ratio:7.2f}{flag}")
+        if ratio > args.threshold:
+            regressions.append((name, ratio))
+
+    if only_base:
+        print(f"\n# {len(only_base)} baseline-only rows (not run): "
+              + ", ".join(only_base[:5]) + ("..." if len(only_base) > 5 else ""))
+    if only_fresh:
+        print(f"# {len(only_fresh)} new rows (no baseline): "
+              + ", ".join(only_fresh[:5]) + ("..." if len(only_fresh) > 5 else ""))
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} regression(s) over "
+              f"{args.threshold:.2f}x:", file=sys.stderr)
+        for name, ratio in regressions:
+            print(f"  {name}: {ratio:.2f}x", file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(common)} rows within {args.threshold:.2f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

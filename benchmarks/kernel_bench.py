@@ -19,6 +19,53 @@ def _t(fn, repeats=3):
     return (time.perf_counter() - t0) / repeats * 1e6
 
 
+def _rand_slab(jr, rng, n, universe, capacity):
+    vals = np.unique(rng.integers(0, universe, n))
+    return jr.from_dense_array(vals, capacity, 1 << 17)
+
+
+def dispatch_ab(quick: bool = False):
+    """A/B: hybrid per-kind dispatch vs the legacy bitmap-domain path.
+
+    Three workload shapes: sparse (all array containers — the case the
+    bitmap-domain path taxes hardest), mixed (array x bitmap), dense (all
+    bitmap). Derived column = speedup of dispatch over bitmap-domain on the
+    same jitted intersection.
+    """
+    import jax
+    from repro.core import jax_roaring as jr
+
+    rows = []
+    rng = np.random.default_rng(7)
+    C = 16
+    workloads = {
+        # (n_a, n_b, universe): universe/chunks chosen so per-chunk cards
+        # land well under / around / over the 4096 threshold
+        "sparse": (12000, 12000, C << 16),     # ~750/chunk -> arrays
+        "mixed": (3000, 60000, 8 << 16),       # arrays vs ~7.5k/chunk bitmaps
+        "dense": (100000, 100000, 8 << 16),    # ~12k/chunk -> bitmaps
+    }
+    repeats = 3 if quick else 5
+    for name, (na, nb, universe) in workloads.items():
+        sa = _rand_slab(jr, rng, na, universe, C)
+        sb = _rand_slab(jr, rng, nb, universe, C)
+        f_new = jax.jit(lambda x, y: jr.slab_and(x, y, capacity=C))
+        f_old = jax.jit(lambda x, y: jr.slab_and_bitmap_domain(x, y, capacity=C))
+        f_card = jax.jit(jr.slab_and_card)
+        us_new = _t(lambda: f_new(sa, sb), repeats)
+        us_old = _t(lambda: f_old(sa, sb), repeats)
+        us_card = _t(lambda: f_card(sa, sb), repeats)
+        speedup = us_old / max(us_new, 1e-9)
+        rows.append((f"kernels/dispatch_ab/{name}/bitmap_domain",
+                     round(us_old, 1), ""))
+        rows.append((f"kernels/dispatch_ab/{name}/hybrid_dispatch",
+                     round(us_new, 1), round(speedup, 2)))
+        rows.append((f"kernels/dispatch_ab/{name}/and_card_only",
+                     round(us_card, 1),
+                     round(us_old / max(us_card, 1e-9), 2)))
+    return rows
+
+
 def run(quick: bool = False):
     rows = []
     from repro.core import jax_roaring as jr
@@ -45,6 +92,9 @@ def run(quick: bool = False):
     f = jax.jit(lambda x, y: slab_and(x, y, capacity=16).cardinality)
     us = _t(lambda: f(sa, sb))
     rows.append(("kernels/slab_and_30k", round(us, 1), int(f(sa, sb))))
+
+    # hybrid dispatch vs bitmap-domain A/B
+    rows.extend(dispatch_ab(quick=quick))
 
     # sparse attention ref vs flash ref at 2k
     from repro.models import attention as A

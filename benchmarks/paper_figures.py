@@ -155,6 +155,39 @@ def tables_realdata(n_bitmaps: int = 60, n_pairs: int = 30) -> list:
     return rows
 
 
+def dispatch_ab_sweep(repeats: int = 3, n: int = 10_000) -> list:
+    """Hybrid per-kind dispatch vs bitmap-domain slab AND across the paper's
+    density axis (C&DP sets): sparse densities produce array containers (the
+    workload the bitmap-domain path taxes ~linearly in 2^16), dense densities
+    produce bitmap containers (where the two paths converge). Derived column
+    = dispatch speedup; also cross-checks both paths against py_roaring."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import jax_roaring as jr
+
+    rows = []
+    for e in (8, 4, 1):                      # d = 2^-8 (sparse) .. 2^-1 (dense)
+        d = 2.0 ** -e
+        va = gen_set(d, "uniform", seed=e, n=n)
+        vb = gen_set(d, "uniform", seed=100 + e, n=n)
+        cap = max(1, int(np.ceil(n / d / (1 << 16))) + 1)
+        sa = jr.from_dense_array(va, cap, 1 << 16)
+        sb = jr.from_dense_array(vb, cap, 1 << 16)
+        f_new = jax.jit(lambda x, y: jr.slab_and(x, y))
+        f_old = jax.jit(lambda x, y: jr.slab_and_bitmap_domain(x, y))
+        us_new = _time_us(lambda: jax.block_until_ready(f_new(sa, sb)), repeats)
+        us_old = _time_us(lambda: jax.block_until_ready(f_old(sa, sb)), repeats)
+        want = len(RoaringBitmap.from_sorted_unique(va)
+                   & RoaringBitmap.from_sorted_unique(vb))
+        got_new = int(f_new(sa, sb).cardinality)
+        got_old = int(f_old(sa, sb).cardinality)
+        assert got_new == want and got_old == want, (got_new, got_old, want)
+        rows.append((f"dispatch_ab/d=2^-{e}/bitmap_domain", round(us_old, 1), ""))
+        rows.append((f"dispatch_ab/d=2^-{e}/hybrid_dispatch", round(us_new, 1),
+                     round(us_old / max(us_new, 1e-9), 2)))
+    return rows
+
+
 def alg4_many_way_union(n_bitmaps: int = 64, repeats: int = 3) -> list:
     """Algorithm 4 vs naive left-fold union (paper S4 'aggregating many')."""
     from repro.core import union_many

@@ -16,13 +16,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced repeats")
     ap.add_argument("--sections", default="all",
-                    help="comma list: fig2ab,fig2cd,fig2ef,tables,alg4,kernels,jax")
+                    help="comma list: fig2ab,fig2cd,fig2ef,tables,alg4,"
+                         "dispatch,kernels,jax")
     args = ap.parse_args()
 
     from . import paper_figures as pf
 
     sections = args.sections.split(",") if args.sections != "all" else [
-        "fig2ab", "fig2cd", "fig2ef", "tables", "alg4", "kernels", "jax"]
+        "fig2ab", "fig2cd", "fig2ef", "tables", "alg4", "dispatch",
+        "kernels", "jax"]
     rows = []
 
     def run(name, fn):
@@ -38,6 +40,7 @@ def main() -> None:
     run("tables", lambda: pf.tables_realdata(
         n_bitmaps=30 if args.quick else 60, n_pairs=15 if args.quick else 30))
     run("alg4", lambda: pf.alg4_many_way_union(repeats=r))
+    run("dispatch", lambda: pf.dispatch_ab_sweep(repeats=r))
 
     if "kernels" in sections:
         try:

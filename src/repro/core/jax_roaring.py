@@ -12,12 +12,19 @@ execution (static shapes, no pointer chasing):
     ``card`` the per-container cardinality counters (paper S2), ``kind`` the
     container type tag (0 empty / 1 array / 2 bitmap).
 
-XLA-path set operations run in *bitmap domain* (uniform, maskable); the
-paper's hybrid per-type dispatch — which skips work instead of masking it —
-lives in the Pallas kernels (``repro.kernels.roaring``), where ``@pl.when``
-on container-type tags skips whole 8 kB tiles. Cardinality is maintained with
+Set algebra runs the paper's *hybrid per-kind dispatch* (S4): key-aligned
+container pairs are classified by ``(kind_a, kind_b)`` and routed through the
+matching algorithm — vectorized galloping for array x array, bit probes for
+array x bitmap (no domain lift), fused word-op + popcount for
+bitmap x bitmap. On TPU the routing is a ``@pl.when``-tagged Pallas kernel
+(``repro.kernels.roaring``) that *skips* the mismatched work per 8 kB tile;
+the XLA reference computes the same three cheap paths masked. Output
+canonicalization is *lazy*: only bitmap-domain rows that cross back under the
+4096 threshold pay the O(2^16) ``row_bits_to_array`` extraction, and that
+whole pass is ``lax.cond``-guarded so array-dominated workloads never touch
+the 2^16-element domain at runtime. Cardinality is maintained with
 ``lax.population_count`` (the popcnt the paper leans on) fused into the same
-pass, mirroring Algorithm 1/3.
+pass, mirroring Algorithm 1/3. See DESIGN.md for the dispatch table.
 
 All functions are jit-/vmap-/pjit-compatible and allocation-free at trace
 time; capacities are static Python ints.
@@ -246,7 +253,13 @@ def extract_row(slab: RoaringSlab, r, max_out: int = ARRAY_MAX):
 
 def contains(slab: RoaringSlab, queries: jax.Array) -> jax.Array:
     """Batched membership test (paper S3): first-level binary search, then
-    array binary search or bitmap bit probe, selected by container kind."""
+    array binary search or bitmap bit probe, selected by container kind.
+
+    Bandwidth-lean: the bitmap path gathers only the one probed 16-bit word
+    and the array path gathers one element per halving step (13 for a
+    4096-wide window), instead of pulling the full 8 kB row per query into
+    the vmap.
+    """
     q = queries.astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
     hi = (q >> CHUNK_BITS).astype(jnp.int32)
     lo = (q & (CHUNK_SIZE - 1)).astype(jnp.int32)
@@ -255,16 +268,29 @@ def contains(slab: RoaringSlab, queries: jax.Array) -> jax.Array:
     key_hit = slab.keys[row_c] == hi
 
     def one(row_i, lo_i):
-        data = slab.data[row_i]
         card = slab.card[row_i]
         kind = slab.kind[row_i]
-        # array path: binary search in packed sorted prefix
-        pos = jnp.searchsorted(data, lo_i.astype(jnp.uint16))
-        arr_hit = (pos < card) & (data[jnp.minimum(pos, ROW_WORDS - 1)]
-                                  == lo_i.astype(jnp.uint16))
-        # bitmap path: probe bit
-        word = data[lo_i >> 4]
-        bit_hit = ((word >> (lo_i & 15).astype(jnp.uint16)) & jnp.uint16(1)) == 1
+        # bitmap path: probe a single word
+        word = slab.data[row_i, lo_i >> 4].astype(jnp.int32)
+        bit_hit = ((word >> (lo_i & 15)) & 1) == 1
+        # array path: binary search over the packed prefix, one gathered
+        # element per step (log-bounded traffic; 0xFFFF padding keeps the
+        # row globally sorted so the [0, card) window is safe). 13 steps:
+        # lower_bound must shrink a window of up to 4096 to size 0, which
+        # takes ceil(log2(4096)) + 1 halvings.
+        def body(_, lh):
+            l, h = lh
+            mid = (l + h) // 2
+            v = slab.data[row_i, jnp.clip(mid, 0, ROW_WORDS - 1)].astype(
+                jnp.int32)
+            go_right = v < lo_i
+            return (jnp.where(go_right, mid + 1, l),
+                    jnp.where(go_right, h, mid))
+
+        l, _ = jax.lax.fori_loop(0, 13, body, (jnp.int32(0), card))
+        probe = slab.data[row_i, jnp.clip(l, 0, ROW_WORDS - 1)].astype(
+            jnp.int32)
+        arr_hit = (l < card) & (probe == lo_i)
         return jnp.where(kind == KIND_BITMAP, bit_hit,
                          jnp.where(kind == KIND_ARRAY, arr_hit, False))
 
@@ -291,8 +317,24 @@ def rank(slab: RoaringSlab, x: jax.Array) -> jax.Array:
 
 
 # =============================================================================
-# set algebra (XLA bitmap-domain path; hybrid dispatch is in the Pallas kernel)
+# set algebra: hybrid per-kind dispatch (paper S4)
+#
+# Key-aligned container pairs are classified by (kind_a, kind_b) and routed
+# through the matching algorithm via repro.kernels.roaring (Pallas @pl.when
+# on TPU, XLA reference elsewhere). Canonicalization is lazy: only
+# bitmap-domain output rows that land back under the 4096 threshold pay the
+# O(2^16) extraction, and the pass is lax.cond-guarded so it is skipped at
+# runtime when no row needs it. The pre-dispatch bitmap-domain formulation is
+# kept below as slab_*_bitmap_domain for A/B benchmarking and cross-checks.
 # =============================================================================
+
+def _pad_keys(keys: jax.Array, capacity: int) -> jax.Array:
+    n = keys.shape[0]
+    if capacity <= n:
+        return keys[:capacity]
+    return jnp.concatenate(
+        [keys, jnp.full((capacity - n,), KEY_SENTINEL, jnp.int32)])
+
 
 def _merge_keys(a: RoaringSlab, b: RoaringSlab, capacity: int) -> jax.Array:
     """Union of the two sorted key sets, deduplicated, padded with sentinel."""
@@ -301,8 +343,286 @@ def _merge_keys(a: RoaringSlab, b: RoaringSlab, capacity: int) -> jax.Array:
     dup = jnp.concatenate([jnp.array([False]), srt[1:] == srt[:-1]])
     vals = jnp.where(dup, KEY_SENTINEL, srt)
     vals = jnp.sort(vals)
-    return vals[:capacity]
+    return _pad_keys(vals, capacity)
 
+
+def _intersect_keys(a: RoaringSlab, b: RoaringSlab, capacity: int) -> jax.Array:
+    """Keys present in *both* slabs (the only rows an AND can populate), so
+    the dispatch grid is |A.keys ∩ B.keys| rows instead of the union."""
+    pos = jnp.searchsorted(b.keys, a.keys)
+    pos_c = jnp.minimum(pos, b.capacity - 1)
+    hit = (b.keys[pos_c] == a.keys) & (a.keys != KEY_SENTINEL)
+    vals = jnp.sort(jnp.where(hit, a.keys, KEY_SENTINEL))
+    return _pad_keys(vals, capacity)
+
+
+def _gather_raw(s: RoaringSlab, keys: jax.Array):
+    """Raw rows of ``s`` aligned to ``keys`` — native container form, no
+    bitmap-domain lift. Absent keys get (card=0, kind=EMPTY)."""
+    pos = jnp.searchsorted(s.keys, keys)
+    pos_c = jnp.minimum(pos, s.capacity - 1)
+    present = (s.keys[pos_c] == keys) & (keys != KEY_SENTINEL)
+    data = s.data[pos_c]
+    card = jnp.where(present, s.card[pos_c], 0)
+    kind = jnp.where(present, s.kind[pos_c], KIND_EMPTY)
+    return data, card, kind
+
+
+def _compact_row(vals: jax.Array, hit: jax.Array) -> jax.Array:
+    """Scatter the hit subset of a packed row into a fresh packed sorted row
+    (0xFFFF padded). O(4096), never touches the 2^16-element domain."""
+    h = hit.astype(jnp.int32)
+    rank = jnp.cumsum(h) - h
+    idx = jnp.where(hit, rank, ROW_WORDS)
+    return jnp.full((ROW_WORDS,), 0xFFFF, jnp.uint16).at[idx].set(
+        vals, mode="drop")
+
+
+def _rows_bits_to_array_lazy(bits: jax.Array, need: jax.Array,
+                             card: jax.Array) -> jax.Array:
+    """Lazy Algorithm 2 over rows: the O(2^16) extraction runs only when at
+    least one row actually crosses back under the 4096 threshold; otherwise
+    lax.cond skips the whole pass at runtime."""
+    masked = jnp.where(need[:, None], bits, jnp.uint16(0))
+    arrs = jax.lax.cond(
+        jnp.any(need),
+        lambda m: jax.vmap(row_bits_to_array)(m),
+        lambda m: jnp.zeros_like(m),
+        masked)
+    return jnp.where(jnp.arange(ROW_WORDS)[None, :] < card[:, None],
+                     arrs, jnp.uint16(0xFFFF))
+
+
+def _assemble(keys, data, card):
+    """Final slab assembly: kind from the 4096 rule, dead rows keyed out,
+    rows re-sorted so live keys lead."""
+    live = card > 0
+    is_big = card > ARRAY_MAX
+    kind = jnp.where(~live, KIND_EMPTY,
+                     jnp.where(is_big, KIND_BITMAP, KIND_ARRAY))
+    out_keys = jnp.where(live, keys, KEY_SENTINEL)
+    order = jnp.argsort(out_keys)
+    return RoaringSlab(keys=out_keys[order], card=jnp.where(live, card, 0)[order],
+                       kind=kind[order], data=data[order])
+
+
+def _dispatch_meta(ka, kb, ca, cb) -> jax.Array:
+    """Interleave (kind_a, kind_b, card_a, card_b) per row -> i32[4C]."""
+    return jnp.stack([ka, kb, ca, cb], axis=1).reshape(-1).astype(jnp.int32)
+
+
+def slab_and(a: RoaringSlab, b: RoaringSlab,
+             capacity: int | None = None) -> RoaringSlab:
+    """Hybrid-dispatch intersection (paper S4 AND table).
+
+    array x array -> vectorized galloping; array x bitmap -> bit probes;
+    bitmap x bitmap -> fused word-AND + popcount (Alg. 3). Array-side outputs
+    are provably <= min(card_a, card_b) <= 4096, so they compact straight to
+    packed arrays — no bitmap round trip; only bitmap x bitmap rows that land
+    under the threshold pay the (cond-guarded) Algorithm 2 extraction.
+    """
+    from repro.kernels.roaring import ops as _kops
+    capacity = capacity or min(a.capacity, b.capacity)
+    keys = _intersect_keys(a, b, capacity)
+    da, ca, ka = _gather_raw(a, keys)
+    db, cb, kb = _gather_raw(b, keys)
+    hits, card = _kops.intersect_dispatch(da, db, _dispatch_meta(ka, kb, ca, cb))
+    bb = (ka == KIND_BITMAP) & (kb == KIND_BITMAP)
+    ba = (ka == KIND_BITMAP) & (kb == KIND_ARRAY)
+    src = jnp.where(ba[:, None], db, da)          # hits index the array side
+    arr_rows = jax.vmap(_compact_row)(src, (hits == 1) & ~bb[:, None])
+    need_dc = bb & (card > 0) & (card <= ARRAY_MAX)
+    dc_rows = _rows_bits_to_array_lazy(hits, need_dc, card)
+    data = jnp.where((card > ARRAY_MAX)[:, None], hits,
+                     jnp.where(need_dc[:, None], dc_rows, arr_rows))
+    return _assemble(keys, data, card)
+
+
+def slab_and_card(a: RoaringSlab, b: RoaringSlab) -> jax.Array:
+    """|A ∩ B| without materializing a result slab (Alg. 3 line 5 for free:
+    the dispatch kernel's fused popcount/hit-count is the entire answer)."""
+    from repro.kernels.roaring import ops as _kops
+    keys = _intersect_keys(a, b, min(a.capacity, b.capacity))
+    da, ca, ka = _gather_raw(a, keys)
+    db, cb, kb = _gather_raw(b, keys)
+    _, card = _kops.intersect_dispatch(da, db, _dispatch_meta(ka, kb, ca, cb))
+    return jnp.sum(card)
+
+
+def slab_or_card(a: RoaringSlab, b: RoaringSlab) -> jax.Array:
+    """|A ∪ B| via inclusion-exclusion on the per-container counters."""
+    return a.cardinality + b.cardinality - slab_and_card(a, b)
+
+
+def slab_jaccard(a: RoaringSlab, b: RoaringSlab) -> jax.Array:
+    """|A ∩ B| / |A ∪ B| in one dispatch pass (0 when both empty)."""
+    inter = slab_and_card(a, b)
+    union = a.cardinality + b.cardinality - inter
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1), 0.0)
+
+
+def stack_slabs(slabs: list[RoaringSlab]) -> RoaringSlab:
+    """Stack same-capacity slabs into one batched (leading-axis) slab."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *slabs)
+
+
+def slab_and_many(query: RoaringSlab, slabs: list[RoaringSlab],
+                  unroll: bool = False) -> RoaringSlab:
+    """Batched ``query ∩ slab_i`` over a fleet of same-capacity slabs.
+
+    Default is one vmapped dispatch (single fused launch) — note that vmap
+    lowers the lax.cond laziness guards to select, so the down-conversion
+    pass runs for every batch element. ``unroll=True`` traces each pair
+    separately (compile time grows with the fleet) but keeps the runtime
+    laziness per slab — prefer it for large fleets of array-dominated slabs.
+    """
+    if unroll:
+        return stack_slabs([slab_and(query, s) for s in slabs])
+    return jax.vmap(lambda s: slab_and(query, s))(stack_slabs(slabs))
+
+
+def slab_and_card_many(query: RoaringSlab,
+                       slabs: list[RoaringSlab]) -> jax.Array:
+    """Batched intersection cardinalities — the query-engine primitive
+    (score many posting lists against one query without materializing).
+    Cond-free, so vmap costs nothing extra."""
+    stacked = stack_slabs(slabs)
+    return jax.vmap(lambda s: slab_and_card(query, s))(stacked)
+
+
+def _lift_rows(data, card, kind):
+    return jax.vmap(row_to_bits)(data, card, kind)
+
+
+def _row_merge_sparse(da, ca, db, cb, *, xor: bool):
+    """Array x array union/xor by sorted merge of the two packed prefixes —
+    O(8192 log), stays entirely in array domain. Only meaningful when
+    card_a + card_b <= 4096 (caller guarantees via the pair class)."""
+    INVALID = jnp.int32(1) << 17
+    slot = jnp.arange(ROW_WORDS, dtype=jnp.int32)
+    ia = jnp.where(slot < ca, da.astype(jnp.int32), INVALID)
+    ib = jnp.where(slot < cb, db.astype(jnp.int32), INVALID)
+    cat = jnp.sort(jnp.concatenate([ia, ib]))
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), cat[:-1]])
+    nxt = jnp.concatenate([cat[1:], jnp.full((1,), -2, jnp.int32)])
+    first = cat != prev
+    keep = first & (cat < INVALID)
+    if xor:
+        keep = keep & (cat != nxt)
+    h = keep.astype(jnp.int32)
+    rank = jnp.cumsum(h) - h
+    idx = jnp.where(keep, rank, 2 * ROW_WORDS)
+    row = jnp.full((ROW_WORDS,), 0xFFFF, jnp.uint16).at[idx].set(
+        cat.astype(jnp.uint16), mode="drop")
+    return row, jnp.sum(h)
+
+
+def _union_like(a: RoaringSlab, b: RoaringSlab, capacity: int,
+                word_op, xor: bool) -> RoaringSlab:
+    """Shared OR/XOR pipeline: sparse array pairs merge in array domain,
+    everything else goes through the bitmap domain. Both passes (and the
+    down-conversion) are lax.cond-guarded symmetrically, so an all-array
+    workload never lifts and an all-bitmap workload never sorts."""
+    keys = _merge_keys(a, b, capacity)
+    da, ca, ka = _gather_raw(a, keys)
+    db, cb, kb = _gather_raw(b, keys)
+    arrayish = (ka != KIND_BITMAP) & (kb != KIND_BITMAP)
+    small = arrayish & (ca + cb <= ARRAY_MAX)
+    use_bitmap = ~small & ((ka != KIND_EMPTY) | (kb != KIND_EMPTY))
+
+    def merge_pass(args):
+        da, ca, db, cb = args
+        return jax.vmap(
+            functools.partial(_row_merge_sparse, xor=xor))(da, ca, db, cb)
+
+    def merge_skip(args):
+        return (jnp.full((keys.shape[0], ROW_WORDS), 0xFFFF, jnp.uint16),
+                jnp.zeros((keys.shape[0],), jnp.int32))
+
+    merge_rows, merge_card = jax.lax.cond(jnp.any(small), merge_pass,
+                                          merge_skip, (da, ca, db, cb))
+
+    def bitmap_pass(args):
+        da, ca, ka, db, cb, kb = args
+        out = word_op(_lift_rows(da, ca, ka), _lift_rows(db, cb, kb))
+        return out, jax.vmap(row_popcount)(out)
+
+    def skip(args):
+        return (jnp.zeros((keys.shape[0], ROW_WORDS), jnp.uint16),
+                jnp.zeros((keys.shape[0],), jnp.int32))
+
+    bits, bcard = jax.lax.cond(jnp.any(use_bitmap), bitmap_pass, skip,
+                               (da, ca, ka, db, cb, kb))
+    card = jnp.where(use_bitmap, bcard, merge_card)
+    need_dc = use_bitmap & (card > 0) & (card <= ARRAY_MAX)
+    dc_rows = _rows_bits_to_array_lazy(bits, need_dc, card)
+    data = jnp.where((card > ARRAY_MAX)[:, None], bits,
+                     jnp.where(need_dc[:, None], dc_rows, merge_rows))
+    return _assemble(keys, data, card)
+
+
+def slab_or(a: RoaringSlab, b: RoaringSlab,
+            capacity: int | None = None) -> RoaringSlab:
+    return _union_like(a, b, capacity or (a.capacity + b.capacity),
+                       jnp.bitwise_or, xor=False)
+
+
+def slab_xor(a: RoaringSlab, b: RoaringSlab,
+             capacity: int | None = None) -> RoaringSlab:
+    return _union_like(a, b, capacity or (a.capacity + b.capacity),
+                       jnp.bitwise_xor, xor=True)
+
+
+def slab_andnot(a: RoaringSlab, b: RoaringSlab,
+                capacity: int | None = None) -> RoaringSlab:
+    """A \\ B with per-kind dispatch: array-A rows probe B directly (result
+    provably <= card_a <= 4096, stays array); only bitmap-A rows go through
+    the (cond-guarded) bitmap domain."""
+    capacity = capacity or a.capacity
+    keys = _pad_keys(a.keys, capacity)
+    da, ca, ka = _gather_raw(a, keys)
+    db, cb, kb = _gather_raw(b, keys)
+    slot = jnp.arange(ROW_WORDS, dtype=jnp.int32)
+
+    def probe_row(dav, cav, dbv, cbv, kbv):
+        pos = jnp.searchsorted(dbv, dav)
+        pos_c = jnp.clip(pos, 0, ROW_WORDS - 1)
+        arr_in = (dbv[pos_c] == dav) & (pos < cbv)
+        v = dav.astype(jnp.int32)
+        word = dbv[v >> 4].astype(jnp.int32)
+        bit_in = ((word >> (v & 15)) & 1) == 1
+        in_b = jnp.where(kbv == KIND_BITMAP, bit_in,
+                         jnp.where(kbv == KIND_ARRAY, arr_in, False))
+        return (slot < cav) & ~in_b
+
+    keep = jax.vmap(probe_row)(da, ca, db, cb, kb) & (ka == KIND_ARRAY)[:, None]
+    arr_rows = jax.vmap(_compact_row)(da, keep)
+    acard = jnp.sum(keep.astype(jnp.int32), axis=1)
+    a_bmp = ka == KIND_BITMAP
+
+    def bitmap_pass(args):
+        da, ca, ka, db, cb, kb = args
+        out = jnp.bitwise_and(_lift_rows(da, ca, ka),
+                              ~_lift_rows(db, cb, kb))
+        return out, jax.vmap(row_popcount)(out)
+
+    def skip(args):
+        return (jnp.zeros((keys.shape[0], ROW_WORDS), jnp.uint16),
+                jnp.zeros((keys.shape[0],), jnp.int32))
+
+    bits, bcard = jax.lax.cond(jnp.any(a_bmp), bitmap_pass, skip,
+                               (da, ca, ka, db, cb, kb))
+    card = jnp.where(a_bmp, bcard, acard)
+    need_dc = a_bmp & (card > 0) & (card <= ARRAY_MAX)
+    dc_rows = _rows_bits_to_array_lazy(bits, need_dc, card)
+    data = jnp.where((card > ARRAY_MAX)[:, None], bits,
+                     jnp.where(need_dc[:, None], dc_rows, arr_rows))
+    return _assemble(keys, data, card)
+
+
+# =============================================================================
+# legacy bitmap-domain path (pre-dispatch) — A/B baseline + cross-check
+# =============================================================================
 
 def _gather_rows(s: RoaringSlab, keys: jax.Array):
     """Bitmap-domain rows of ``s`` aligned to ``keys`` (zeros when absent)."""
@@ -315,6 +635,10 @@ def _gather_rows(s: RoaringSlab, keys: jax.Array):
 
 def _binary_bits_op(a: RoaringSlab, b: RoaringSlab, word_op, capacity: int,
                     intersection: bool) -> RoaringSlab:
+    """Pre-dispatch formulation: lift every row to the 2^16-bit domain,
+    apply the word op, re-canonicalize every output row. Pays the full
+    bitmap-domain tax regardless of container kinds — kept only so the
+    benchmarks can measure what the dispatch path saves."""
     if capacity is None:
         capacity = a.capacity + b.capacity
     keys = _merge_keys(a, b, capacity)
@@ -334,44 +658,34 @@ def _binary_bits_op(a: RoaringSlab, b: RoaringSlab, word_op, capacity: int,
                        data=data[order])
 
 
-def slab_and(a: RoaringSlab, b: RoaringSlab, capacity: int | None = None) -> RoaringSlab:
+def slab_and_bitmap_domain(a: RoaringSlab, b: RoaringSlab,
+                           capacity: int | None = None) -> RoaringSlab:
     return _binary_bits_op(a, b, jnp.bitwise_and,
                            capacity or min(a.capacity, b.capacity) * 2,
                            intersection=True)
 
 
-def slab_or(a: RoaringSlab, b: RoaringSlab, capacity: int | None = None) -> RoaringSlab:
+def slab_or_bitmap_domain(a: RoaringSlab, b: RoaringSlab,
+                          capacity: int | None = None) -> RoaringSlab:
     return _binary_bits_op(a, b, jnp.bitwise_or,
                            capacity or (a.capacity + b.capacity),
                            intersection=False)
 
 
-def slab_xor(a: RoaringSlab, b: RoaringSlab, capacity: int | None = None) -> RoaringSlab:
-    return _binary_bits_op(a, b, jnp.bitwise_xor,
-                           capacity or (a.capacity + b.capacity),
-                           intersection=False)
-
-
-def slab_andnot(a: RoaringSlab, b: RoaringSlab, capacity: int | None = None) -> RoaringSlab:
-    out = _binary_bits_op(a, b, lambda x, y: jnp.bitwise_and(x, ~y),
-                          capacity or a.capacity, intersection=False)
-    # keys only present in A survive; rows from B alone are already zeroed by
-    # the AND-NOT word op (x=0 there), and canonicalize marks them empty.
-    return out
-
-
 def union_many_slabs(slabs: list[RoaringSlab], capacity: int) -> RoaringSlab:
     """Algorithm 4, TPU form: key-aligned segmented OR-reduction in bitmap
-    domain with cardinality computed once at the end (deferred popcount)."""
+    domain with cardinality computed once at the end (deferred popcount).
+    The final array extraction is the cond-guarded lazy pass."""
     all_keys = jnp.concatenate([s.keys for s in slabs])
     srt = jnp.sort(all_keys)
     dup = jnp.concatenate([jnp.array([False]), srt[1:] == srt[:-1]])
-    keys = jnp.sort(jnp.where(dup, KEY_SENTINEL, srt))[:capacity]
+    keys = _pad_keys(jnp.sort(jnp.where(dup, KEY_SENTINEL, srt)), capacity)
     acc = jnp.zeros((capacity, ROW_WORDS), jnp.uint16)
     for s in slabs:                                   # static unroll (fleet size)
         bits, _ = _gather_rows(s, keys)
         acc = jnp.bitwise_or(acc, bits)               # deferred cardinality
-    data, card, kind = jax.vmap(row_canonicalize)(acc)
-    keys = jnp.where(card > 0, keys, KEY_SENTINEL)
-    order = jnp.argsort(keys)
-    return RoaringSlab(keys[order], card[order], kind[order], data[order])
+    card = jax.vmap(row_popcount)(acc)
+    need_dc = (card > 0) & (card <= ARRAY_MAX)
+    arr_rows = _rows_bits_to_array_lazy(acc, need_dc, card)
+    data = jnp.where((card > ARRAY_MAX)[:, None], acc, arr_rows)
+    return _assemble(keys, data, card)

@@ -1,6 +1,7 @@
 from .topk_roaring import (compress_leaf, decompress_leaf, compress_tree,
                            decompress_tree, compressed_crosspod_mean,
-                           compression_ratio)
+                           compression_ratio, leaf_overlap, leaf_jaccard)
 
 __all__ = ["compress_leaf", "decompress_leaf", "compress_tree",
-           "decompress_tree", "compressed_crosspod_mean", "compression_ratio"]
+           "decompress_tree", "compressed_crosspod_mean", "compression_ratio",
+           "leaf_overlap", "leaf_jaccard"]

@@ -80,6 +80,24 @@ def decompress_tree(compressed, like):
         is_leaf=lambda x: isinstance(x, CompressedLeaf))
 
 
+def _leaf_slab(c: CompressedLeaf) -> "jr.RoaringSlab":
+    return jr.RoaringSlab(c.slab_keys, c.slab_card, c.slab_kind, c.slab_data)
+
+
+def leaf_overlap(c1: CompressedLeaf, c2: CompressedLeaf) -> jax.Array:
+    """|idx(c1) ∩ idx(c2)| via the cardinality-only dispatch fast path.
+
+    The top-k *support stability* between consecutive steps — the quantity
+    error-feedback schedules key off — computed without decompressing either
+    leaf or materializing the intersection."""
+    return jr.slab_and_card(_leaf_slab(c1), _leaf_slab(c2))
+
+
+def leaf_jaccard(c1: CompressedLeaf, c2: CompressedLeaf) -> jax.Array:
+    """Jaccard similarity of two compressed index sets (one dispatch pass)."""
+    return jr.slab_jaccard(_leaf_slab(c1), _leaf_slab(c2))
+
+
 def compression_ratio(c: CompressedLeaf, n: int) -> float:
     """Exact roaring-encoded bits vs dense f32 gradient bits.
 

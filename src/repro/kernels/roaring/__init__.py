@@ -1,3 +1,3 @@
-from .ops import container_op, array_intersect
+from .ops import container_op, array_intersect, intersect_dispatch
 
-__all__ = ["container_op", "array_intersect"]
+__all__ = ["container_op", "array_intersect", "intersect_dispatch"]

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for Roaring container operations.
 
-Two kernels:
+Three kernels:
 
 1. ``container_op``: the fused word-op + popcount of Algorithms 1/3. One grid
    step processes one 8 kB container-row pair, reshaped u16[32, 128] to match
@@ -12,9 +12,19 @@ Two kernels:
    TPU the bandwidth term is the floor, see DESIGN.md).
 
 2. ``array_intersect``: the galloping adaptation. Each lane binary-searches
-   the other container's packed sorted array in 12 steps (2^12 = 4096), so
-   comparison count per lane matches galloping's log bound while the VPU
-   amortizes it across 4096 lanes.
+   the other container's packed sorted array in 13 steps (lower_bound over a
+   window of up to 4096 elements), so comparison count per lane matches
+   galloping's log bound while the VPU amortizes it across 4096 lanes.
+
+3. ``intersect_dispatch``: the paper's hybrid per-type dispatch (S4), fused.
+   One grid step reads the ``(kind_a, kind_b)`` tag pair from scalar prefetch
+   and ``@pl.when``-branches into exactly one of: the vectorized galloping
+   search (array x array), batched bit probes of the array's values against
+   the other side's bitmap words (array x bitmap — no domain lift), or the
+   word-AND + fused popcount (bitmap x bitmap). Work is *skipped*, not
+   masked: a sparse pair never touches the 2^16-bit domain. This is the
+   kernel behind ``jax_roaring.slab_and``; the XLA mirror lives in
+   ``ref.intersect_dispatch_ref``.
 
 Block shapes: container rows are (32, 128) u16 tiles = 8 kB — one row per
 grid step keeps VMEM usage at ~3 tiles (a, b, out) plus scalars, far under
@@ -33,6 +43,8 @@ from jax.experimental.pallas import tpu as pltpu
 ROW_WORDS = 4096
 ROW_SHAPE = (32, 128)          # u16[32,128] == one 8 kB container row
 KIND_EMPTY = 0
+KIND_ARRAY = 1
+KIND_BITMAP = 2
 
 _OPS = {
     "and": jnp.bitwise_and,
@@ -101,7 +113,8 @@ def container_op_pallas(a_bits: jax.Array, b_bits: jax.Array,
 
 def _array_intersect_kernel(cards_ref, a_ref, b_ref, hit_ref, count_ref):
     """Vectorized binary search: every element of A (4096 lanes) searches the
-    packed sorted array B in 12 halving steps — galloping's log bound, SIMD."""
+    packed sorted array B in 13 halving steps (lower_bound over a window of
+    up to 4096 needs ceil(log2(4096)) + 1) — galloping's log bound, SIMD."""
     i = pl.program_id(0)
     card_b = cards_ref[2 * i + 1]
     a = a_ref[0].astype(jnp.int32)                # (32,128) values (0xFFFF pad)
@@ -117,7 +130,7 @@ def _array_intersect_kernel(cards_ref, a_ref, b_ref, hit_ref, count_ref):
         go_right = vals < a
         return (jnp.where(go_right, mid + 1, lo), jnp.where(go_right, hi, mid))
 
-    lo, hi = jax.lax.fori_loop(0, 12, body, (lo, hi))
+    lo, hi = jax.lax.fori_loop(0, 13, body, (lo, hi))
     found = jnp.take(b, jnp.clip(lo, 0, ROW_WORDS - 1)) == a
     found = jnp.logical_and(found, lo < card_b)
     card_a = cards_ref[2 * i]
@@ -159,3 +172,113 @@ def array_intersect_pallas(a_arr: jax.Array, b_arr: jax.Array,
         interpret=interpret,
     )(cards, a_arr.reshape(C, *ROW_SHAPE), b_arr.reshape(C, *ROW_SHAPE))
     return hits.reshape(C, ROW_WORDS), count
+
+
+def _flat_pos():
+    return (jax.lax.broadcasted_iota(jnp.int32, ROW_SHAPE, 0) * 128
+            + jax.lax.broadcasted_iota(jnp.int32, ROW_SHAPE, 1))
+
+
+def _intersect_dispatch_kernel(meta_ref, a_ref, b_ref, hits_ref, card_ref):
+    """Hybrid per-type dispatch (paper S4): one container pair per grid step,
+    ``@pl.when`` selects exactly one of the three intersection algorithms.
+
+    ``meta`` is i32[4C] interleaved (kind_a, kind_b, card_a, card_b). Output
+    per row: for pairs with an array side, ``hits`` is a 0/1 mask over the
+    array side's 4096 slots (A's slots unless A is the bitmap); for
+    bitmap x bitmap it is the AND'd bitmap words. ``card`` is exact either
+    way (fused popcount for the bitmap case).
+    """
+    i = pl.program_id(0)
+    ka = meta_ref[4 * i]
+    kb = meta_ref[4 * i + 1]
+    ca = meta_ref[4 * i + 2]
+    cb = meta_ref[4 * i + 3]
+    live = jnp.logical_and(ka != KIND_EMPTY, kb != KIND_EMPTY)
+    aa = live & (ka == KIND_ARRAY) & (kb == KIND_ARRAY)
+    ab = live & (ka == KIND_ARRAY) & (kb == KIND_BITMAP)
+    ba = live & (ka == KIND_BITMAP) & (kb == KIND_ARRAY)
+    bb = live & (ka == KIND_BITMAP) & (kb == KIND_BITMAP)
+
+    @pl.when(bb)
+    def _bitmap_bitmap():
+        # Algorithm 3: word AND with the popcount fused into the same pass
+        res = jnp.bitwise_and(a_ref[0], b_ref[0])
+        hits_ref[0] = res
+        card_ref[0] = jnp.sum(jax.lax.population_count(res).astype(jnp.int32))
+
+    @pl.when(aa)
+    def _array_array():
+        # vectorized galloping: every lane of A binary-searches B. 13 steps:
+        # lower_bound over a window of up to 4096 needs ceil(log2(4096)) + 1
+        # halvings to reach size 0 (12 leaves a size-1 window unresolved).
+        a = a_ref[0].astype(jnp.int32)
+        b = b_ref[0].reshape(ROW_WORDS).astype(jnp.int32)
+        lo = jnp.zeros(ROW_SHAPE, jnp.int32)
+        hi = jnp.full(ROW_SHAPE, cb, jnp.int32)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = (lo + hi) // 2
+            vals = jnp.take(b, jnp.clip(mid, 0, ROW_WORDS - 1))
+            go_right = vals < a
+            return (jnp.where(go_right, mid + 1, lo),
+                    jnp.where(go_right, hi, mid))
+
+        lo, hi = jax.lax.fori_loop(0, 13, body, (lo, hi))
+        found = jnp.take(b, jnp.clip(lo, 0, ROW_WORDS - 1)) == a
+        found = found & (lo < cb) & (_flat_pos() < ca)
+        hits_ref[0] = found.astype(jnp.uint16)
+        card_ref[0] = jnp.sum(found.astype(jnp.int32))
+
+    @pl.when(jnp.logical_or(ab, ba))
+    def _array_bitmap():
+        # bit probes: the array side's <=4096 values index the bitmap side's
+        # words directly — the 2^16-bit domain is never materialized
+        arr = jnp.where(ab, a_ref[0], b_ref[0]).astype(jnp.int32)
+        bits = jnp.where(ab, b_ref[0], a_ref[0]).reshape(ROW_WORDS)
+        word = jnp.take(bits, arr >> 4).astype(jnp.int32)
+        hit = ((word >> (arr & 15)) & 1) == 1
+        hit = hit & (_flat_pos() < jnp.where(ab, ca, cb))
+        hits_ref[0] = hit.astype(jnp.uint16)
+        card_ref[0] = jnp.sum(hit.astype(jnp.int32))
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        hits_ref[0] = jnp.zeros(ROW_SHAPE, jnp.uint16)
+        card_ref[0] = 0
+
+
+def intersect_dispatch_pallas(a_data: jax.Array, b_data: jax.Array,
+                              meta: jax.Array, interpret: bool = True):
+    """Fused hybrid intersection over key-aligned container rows.
+
+    a_data, b_data: u16[C, 4096] raw container rows (packed arrays or bitmap
+    words, per their kind tag — *not* lifted to bitmap domain).
+    meta: i32[4C] interleaved (kind_a, kind_b, card_a, card_b) per row.
+    Returns (hits u16[C, 4096], card i32[C]); see the kernel docstring for
+    the per-pair-type meaning of ``hits``.
+    """
+    C = a_data.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i, k: (i,), memory_space=pltpu.SMEM),
+        ],
+    )
+    hits, card = pl.pallas_call(
+        _intersect_dispatch_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, *ROW_SHAPE), jnp.uint16),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(meta, a_data.reshape(C, *ROW_SHAPE), b_data.reshape(C, *ROW_SHAPE))
+    return hits.reshape(C, ROW_WORDS), card

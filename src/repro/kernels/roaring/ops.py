@@ -42,3 +42,22 @@ def array_intersect(a_arr, b_arr, cards,
         return _k.array_intersect_pallas(a_arr, b_arr, cards,
                                          interpret=not _on_tpu())
     return _ref.array_intersect_ref(a_arr, b_arr, cards)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def intersect_dispatch(a_data, b_data, meta,
+                       use_pallas: bool | None = None,
+                       interpret: bool = False):
+    """Hybrid per-kind container intersection over key-aligned rows.
+
+    meta: i32[4C] interleaved (kind_a, kind_b, card_a, card_b). Returns
+    (hits u16[C, 4096], card i32[C]) — the slab layer compacts / lazily
+    canonicalizes on top of this. Pallas (``@pl.when`` skip) on TPU, XLA
+    reference elsewhere.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _k.intersect_dispatch_pallas(a_data, b_data, meta,
+                                            interpret=not _on_tpu())
+    return _ref.intersect_dispatch_ref(a_data, b_data, meta)

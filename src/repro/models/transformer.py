@@ -31,6 +31,24 @@ def _dtype(name: str):
     return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
 
 
+@jax.custom_vjp
+def _residual_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _residual_barrier_fwd(x):
+    return _residual_barrier(x), None
+
+
+def _residual_barrier_bwd(_, g):
+    return (g,)
+
+
+# optimization_barrier has no differentiation rule; the barrier only shapes
+# scheduling, so its VJP is the identity
+_residual_barrier.defvjp(_residual_barrier_fwd, _residual_barrier_bwd)
+
+
 # =============================================================================
 # init
 # =============================================================================
@@ -143,7 +161,7 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
         # barrier: stop XLA from hoisting the first rms_norm's f32 upcast
         # into the scan's saved carry (bf16 residuals, not f32 — ~6 GB on
         # jamba train; see EXPERIMENTS.md §Perf)
-        x = jax.lax.optimization_barrier(x)
+        x = _residual_barrier(x)
         x = dctx.constrain_batch(x)             # anchor batch sharding
         if cfg.layer_pattern == "encdec":
             layer_params, cross_p = layer_params

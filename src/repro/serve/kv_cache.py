@@ -73,6 +73,36 @@ class RoaringPageTable:
     def utilization(self) -> float:
         return 1.0 - len(self.free) / self.n_pages
 
+    # -- device-side views (jax_roaring hybrid dispatch) ----------------------
+    def _page_capacity(self) -> int:
+        from repro.core import jax_roaring as jr
+        return max(1, (self.n_pages + jr.CHUNK_SIZE - 1) // jr.CHUNK_SIZE)
+
+    def free_slab(self):
+        """Free-page set as a device RoaringSlab (for jit-side allocators)."""
+        from repro.core import jax_roaring as jr
+        return jr.from_dense_array(self.free.to_array(),
+                                   self._page_capacity(), self.n_pages)
+
+    def used_slab(self):
+        """In-use pages as a device RoaringSlab (Alg. 4 union of per-seq sets)."""
+        from repro.core import jax_roaring as jr
+        return jr.from_dense_array(self.used_bitmap().to_array(),
+                                   self._page_capacity(), self.n_pages)
+
+    def shared_pages(self, seq_a: int, seq_b: int) -> int:
+        """# physical pages two sequences share (prefix-cache diagnostics) via
+        the cardinality-only dispatch fast path — no result set materialized."""
+        from repro.core import jax_roaring as jr
+        cap = self._page_capacity()
+        sa = jr.from_dense_array(
+            np.asarray(self.seq_pages.get(seq_a, []), np.int64), cap,
+            self.n_pages)
+        sb = jr.from_dense_array(
+            np.asarray(self.seq_pages.get(seq_b, []), np.int64), cap,
+            self.n_pages)
+        return int(jr.slab_and_card(sa, sb))
+
     # -- kernel metadata -------------------------------------------------------
     def gather_lists(self, seq_ids: List[int], max_pages: int):
         """(page_idx i32[B, max_pages], counts i32[B], lengths i32[B])."""

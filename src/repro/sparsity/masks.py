@@ -125,6 +125,49 @@ def mask_density(kv_idx: np.ndarray, counts: np.ndarray) -> float:
     return float(counts.sum()) / (kv_idx.shape[0] ** 2)
 
 
+# =============================================================================
+# device-side mask algebra (jax_roaring hybrid dispatch)
+# =============================================================================
+
+def rows_to_slabs(rows: Sequence[RoaringBitmap], capacity: int = 2):
+    """Stack mask rows into a batched RoaringSlab (leading axis = row).
+
+    Block-id universes are small (< 2^16 for any practical block count), so
+    each row is one array or bitmap container; the stacked slab feeds the
+    vmapped dispatch surfaces below.
+    """
+    from repro.core import jax_roaring as jr
+
+    max_n = max(1, max((len(r) for r in rows), default=1))
+    return jr.stack_slabs(
+        [jr.from_dense_array(r.to_array(), capacity, max_n) for r in rows])
+
+
+def mask_overlap_cards(m1: "MaskBuilder", m2: "MaskBuilder",
+                       capacity: int = 2) -> np.ndarray:
+    """Per-row |row1 ∩ row2| without materializing intersection masks — the
+    cardinality-only dispatch fast path, vmapped over rows. Useful for
+    quantifying how much two attention patterns share (e.g. how redundant a
+    global stripe is with the local window)."""
+    import jax
+    from repro.core import jax_roaring as jr
+
+    s1 = rows_to_slabs(m1.rows, capacity)
+    s2 = rows_to_slabs(m2.rows, capacity)
+    return np.asarray(jax.vmap(jr.slab_and_card)(s1, s2))
+
+
+def mask_jaccard(m1: "MaskBuilder", m2: "MaskBuilder",
+                 capacity: int = 2) -> np.ndarray:
+    """Per-row Jaccard similarity of two mask patterns (one dispatch pass)."""
+    import jax
+    from repro.core import jax_roaring as jr
+
+    s1 = rows_to_slabs(m1.rows, capacity)
+    s2 = rows_to_slabs(m2.rows, capacity)
+    return np.asarray(jax.vmap(jr.slab_jaccard)(s1, s2))
+
+
 def build_arch_mask(num_blocks: int, *, pattern: str, window_blocks: int = 8,
                     n_global: int = 4, causal: bool = True) -> MaskBuilder:
     """Standard long-context pattern: local window UNION global stripes —

@@ -1,0 +1,88 @@
+"""Import shim: real hypothesis when installed, a minimal fallback otherwise.
+
+The seed image does not ship ``hypothesis``, which used to kill pytest at
+collection time. Tests import ``given``/``settings``/``st`` from here; with
+hypothesis present they get the real thing, otherwise a tiny deterministic
+random-example runner that supports exactly the strategy surface this suite
+uses (``st.integers``, ``st.sets``, ``st.lists``). The fallback always runs
+a minimal example first (empty sets/lists) so shrunk edge cases stay covered.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    _FALLBACK_CAP = 25          # examples per property without hypothesis
+
+    class _Strategy:
+        def __init__(self, gen, minimal):
+            self.gen = gen          # rng -> value
+            self.minimal = minimal  # () -> smallest value
+
+    class st:  # noqa: N801 - mimics `strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             lambda: min_value)
+
+        @staticmethod
+        def sets(elements, min_size=0, max_size=20):
+            def gen(rng):
+                n = rng.randint(min_size, max_size)
+                out = set()
+                for _ in range(4 * n):
+                    if len(out) >= n:
+                        break
+                    out.add(elements.gen(rng))
+                return out
+
+            def minimal():
+                out = set()
+                while len(out) < min_size:
+                    out.add(elements.minimal() + len(out))
+                return out
+
+            return _Strategy(gen, minimal)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=20):
+            def gen(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.gen(rng) for _ in range(n)]
+
+            return _Strategy(gen, lambda: [elements.minimal()] * min_size)
+
+    def settings(max_examples=20, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def runner():
+                n = min(getattr(runner, "_max_examples",
+                                getattr(fn, "_max_examples", 20)),
+                        _FALLBACK_CAP)
+                fn(*[s.minimal() for s in strategies])
+                rng = random.Random(0xD15BA7C4)
+                for _ in range(max(n - 1, 0)):
+                    fn(*[s.gen(rng) for s in strategies])
+
+            # deliberately no functools.wraps: pytest must see a zero-arg
+            # function, not the strategy parameters (it would read them as
+            # fixtures)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco

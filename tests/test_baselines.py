@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.baselines import BitSet, ConciseBitmap, WahBitmap
 from repro.baselines._groups import (groups_to_indices, indices_to_groups)

@@ -19,13 +19,22 @@ from repro.models import attention as attn_mod, common, mlp as mlp_mod
 from repro.models.config import ModelConfig
 
 
+def _flops(compiled) -> float:
+    """cost_analysis() returns a dict or a one-element list of dicts
+    depending on the jax version/executable — normalize."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca["flops"]
+
+
 def test_cost_analysis_ignores_scan_trip_count():
     def make(n):
         def g(x):
             y, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=n)
             return y
         sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-        return jax.jit(g).lower(sds).compile().cost_analysis()["flops"]
+        return _flops(jax.jit(g).lower(sds).compile())
 
     # body counted once regardless of trip count (modulo loop bookkeeping)
     assert make(16) < 1.01 * make(1)     # the documented XLA limitation
@@ -60,7 +69,7 @@ def test_analytic_flops_match_unrolled_hlo(pattern, nl, extra):
     tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
     compiled = jax.jit(
         lambda t: _unrolled_forward(params, t, cfg)).lower(tokens).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    hlo_flops = _flops(compiled)
 
     fc = F.cell_flops(cfg, kind="prefill", seq_len=S, global_batch=B)
     ratio = fc.total / hlo_flops

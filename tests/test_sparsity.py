@@ -71,3 +71,18 @@ def test_compile_mask_500k_scale():
     assert d < 0.01                              # >100x sparser than dense
     # roaring mask footprint far below a dense boolean block matrix
     assert m.size_in_bytes() < nb * nb / 8 / 4
+
+
+def test_mask_overlap_device_dispatch():
+    """Device-side overlap/jaccard (jax_roaring dispatch) vs host sets."""
+    from repro.sparsity import mask_jaccard, mask_overlap_cards
+    nb = 24
+    loc = MaskBuilder(local_window_mask(nb, 4))
+    glb = MaskBuilder(global_stripe_mask(nb, [0, 1, 2]))
+    cards = mask_overlap_cards(loc, glb)
+    jac = mask_jaccard(loc, glb)
+    for r in range(nb):
+        a = set(loc.rows[r].to_array().tolist())
+        b = set(glb.rows[r].to_array().tolist())
+        assert cards[r] == len(a & b)
+        assert jac[r] == pytest.approx(len(a & b) / len(a | b))

@@ -192,7 +192,10 @@ def test_grad_compression_clustered_indices_use_bitmap_containers():
 def test_compressed_crosspod_mean_matches_dense_topk():
     """shard_map over a fake 2-pod mesh: compressed mean == mean of top-k."""
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:          # older jax: experimental namespace
+        from jax.experimental.shard_map import shard_map
     from repro.grad_comp import compressed_crosspod_mean
 
     if jax.device_count() < 2:
@@ -206,3 +209,16 @@ def test_compressed_crosspod_mean_matches_dense_topk():
 
     out = shard_map(f, mesh=mesh, in_specs=(P("pod"),), out_specs=P())(g)
     assert np.isfinite(np.asarray(out)).all()
+
+
+def test_leaf_overlap_and_jaccard():
+    """Compressed-leaf index overlap via the cardinality-only dispatch path."""
+    from repro.grad_comp import compress_leaf, leaf_jaccard, leaf_overlap
+    g1 = jnp.asarray(np.random.default_rng(0).normal(size=8192), jnp.float32)
+    g2 = jnp.asarray(g1).at[:4096].set(0.0)
+    c1, c2 = compress_leaf(g1, 512), compress_leaf(g2, 512)
+    i1 = set(np.asarray(jnp.sort(jnp.argsort(-jnp.abs(g1))[:512])).tolist())
+    i2 = set(np.asarray(jnp.sort(jnp.argsort(-jnp.abs(g2))[:512])).tolist())
+    assert int(leaf_overlap(c1, c2)) == len(i1 & i2)
+    want_j = len(i1 & i2) / len(i1 | i2)
+    assert float(leaf_jaccard(c1, c2)) == pytest.approx(want_j, rel=1e-6)
