@@ -46,13 +46,16 @@ def load_derived(path: str) -> dict:
     return out
 
 
-# within-run speedup rows that must hold on any machine (sparse/mixed A/B);
-# dense is excluded by construction — the two paths converge there
+# within-run speedup rows that must hold on any machine (sparse/mixed A/B
+# plus the 2016-paper run-container regime); dense is excluded by
+# construction — the two paths converge there
 SPEEDUP_ROWS = (
     "kernels/dispatch_ab/sparse/hybrid_dispatch",
     "kernels/dispatch_ab/mixed/hybrid_dispatch",
     "dispatch_ab/d=2^-8/hybrid_dispatch",
     "dispatch_ab/d=2^-4/hybrid_dispatch",
+    "run/run_run/hybrid_dispatch",
+    "run/run_bitmap/hybrid_dispatch",
 )
 
 

@@ -23,7 +23,8 @@ import numpy as np
 from repro.baselines import BitSet, ConciseBitmap, WahBitmap
 from repro.core import RoaringBitmap
 
-from .synth import REAL_SPECS, densities, gen_real_surrogate, gen_set
+from .synth import (REAL_SPECS, densities, gen_real_surrogate, gen_run_set,
+                    gen_set)
 
 SCHEMES = {
     "roaring": RoaringBitmap.from_sorted_unique,
@@ -155,6 +156,38 @@ def tables_realdata(n_bitmaps: int = 60, n_pairs: int = 30) -> list:
     return rows
 
 
+def run_compression(n: int = 100_000) -> list:
+    """Compression-ratio table for run containers (2016 follow-up paper):
+    serialized size of the same sets with the 2-kind (array/bitmap) layout
+    vs best-of-three ``runOptimize``, across the uniform / beta (no run
+    structure — ratio ~1x) and run-friendly workloads (the paper's "often
+    2x better compression" claim; KV pools and window masks land here).
+    Derived column = two-kind bytes / run-optimized bytes. The device slab's
+    ``size_in_bytes`` accounting is cross-checked against the oracle's."""
+    from repro.core import RoaringBitmap, jax_roaring as jr
+
+    workloads = {
+        "uniform/d=2^-4": gen_set(2.0 ** -4, "uniform", 11, n=n),
+        "beta/d=2^-4": gen_set(2.0 ** -4, "beta", 12, n=n),
+        "run/avg=16": gen_run_set(2.0 ** -2, 16.0, 13, n=n),
+        "run/avg=64": gen_run_set(2.0 ** -2, 64.0, 14, n=n),
+        "run/contig": np.arange(n, dtype=np.int64),
+    }
+    rows = []
+    for name, vals in workloads.items():
+        rb = RoaringBitmap.from_sorted_unique(vals)
+        two_kind = rb.size_in_bytes()
+        opt = rb.run_optimize().size_in_bytes()
+        cap = len(rb.keys)
+        slab = jr.from_roaring(rb, cap)
+        assert int(slab.size_in_bytes()) == opt, (name, opt)
+        rows.append((f"compressruns/{name}/two_kind_bytes", 0.0, two_kind))
+        rows.append((f"compressruns/{name}/run_optimized_bytes", 0.0, opt))
+        rows.append((f"compressruns/{name}/ratio", 0.0,
+                     round(two_kind / max(opt, 1), 2)))
+    return rows
+
+
 def dispatch_ab_sweep(repeats: int = 3, n: int = 10_000) -> list:
     """Hybrid per-kind dispatch vs bitmap-domain slab AND across the paper's
     density axis (C&DP sets): sparse densities produce array containers (the
@@ -166,8 +199,10 @@ def dispatch_ab_sweep(repeats: int = 3, n: int = 10_000) -> list:
     from repro.core import jax_roaring as jr
 
     rows = []
-    for e in (8, 4, 1):                      # d = 2^-8 (sparse) .. 2^-1 (dense)
-        d = 2.0 ** -e
+    sparse = densities(sparse_only=True)        # 2^-10 .. 2^-4, array regime
+    sweep = [sparse[2], sparse[-1], 2.0 ** -1]  # 2^-8, 2^-4, then the dense
+    for d in sweep:                             # point where paths converge
+        e = int(round(-np.log2(d)))
         va = gen_set(d, "uniform", seed=e, n=n)
         vb = gen_set(d, "uniform", seed=100 + e, n=n)
         cap = max(1, int(np.ceil(n / d / (1 << 16))) + 1)

@@ -17,14 +17,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="reduced repeats")
     ap.add_argument("--sections", default="all",
                     help="comma list: fig2ab,fig2cd,fig2ef,tables,alg4,"
-                         "dispatch,kernels,jax")
+                         "dispatch,compressruns,kernels,jax")
     args = ap.parse_args()
 
     from . import paper_figures as pf
 
     sections = args.sections.split(",") if args.sections != "all" else [
         "fig2ab", "fig2cd", "fig2ef", "tables", "alg4", "dispatch",
-        "kernels", "jax"]
+        "compressruns", "kernels", "jax"]
     rows = []
 
     def run(name, fn):
@@ -41,6 +41,7 @@ def main() -> None:
         n_bitmaps=30 if args.quick else 60, n_pairs=15 if args.quick else 30))
     run("alg4", lambda: pf.alg4_many_way_union(repeats=r))
     run("dispatch", lambda: pf.dispatch_ab_sweep(repeats=r))
+    run("compressruns", lambda: pf.run_compression())
 
     if "kernels" in sections:
         try:

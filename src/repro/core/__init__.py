@@ -6,9 +6,9 @@
 """
 
 from .py_roaring import (RoaringBitmap, ArrayContainer, BitmapContainer,
-                         union_many, ARRAY_MAX, CHUNK_SIZE)
+                         RunContainer, union_many, ARRAY_MAX, CHUNK_SIZE)
 
 __all__ = [
-    "RoaringBitmap", "ArrayContainer", "BitmapContainer", "union_many",
-    "ARRAY_MAX", "CHUNK_SIZE",
+    "RoaringBitmap", "ArrayContainer", "BitmapContainer", "RunContainer",
+    "union_many", "ARRAY_MAX", "CHUNK_SIZE",
 ]

@@ -4,25 +4,33 @@ The paper's dynamic two-level structure is re-thought for accelerator
 execution (static shapes, no pointer chasing):
 
   * a ``RoaringSlab`` holds up to ``C`` containers. Row ``i`` of ``data``
-    (u16[4096], 8 kB) is *either* a packed sorted u16 array (first ``card[i]``
-    entries) *or* a 2^16-bit bitmap stored as 4096 16-bit words. The paper's
-    4096-element threshold is exactly the break-even where both forms cost
-    8 kB, so a uniform slab row wastes nothing at the boundary.
+    (u16[4096], 8 kB) is a packed sorted u16 array (first ``card[i]``
+    entries), a 2^16-bit bitmap stored as 4096 16-bit words, *or* a packed
+    run list — sorted ``(start, length-1)`` u16 pairs (the 2016 follow-up
+    paper's run containers), padded with ``(0xFFFF, 0xFFFF)`` which can never
+    be a valid run. The paper's 4096-element threshold is exactly the
+    break-even where array and bitmap forms cost 8 kB, so a uniform slab row
+    wastes nothing at the boundary; runs reuse the same row.
   * ``keys`` is the sorted first-level index (padded with ``KEY_SENTINEL``),
     ``card`` the per-container cardinality counters (paper S2), ``kind`` the
-    container type tag (0 empty / 1 array / 2 bitmap).
+    container type tag (0 empty / 1 array / 2 bitmap / 3 run).
 
-Set algebra runs the paper's *hybrid per-kind dispatch* (S4): key-aligned
-container pairs are classified by ``(kind_a, kind_b)`` and routed through the
-matching algorithm — vectorized galloping for array x array, bit probes for
+Set algebra runs the *kind-dispatch engine*: key-aligned container pairs are
+classified by ``(kind_a, kind_b)`` against the declarative registry in
+``repro.kernels.roaring.dispatch`` (one ``PairClass`` per grid cell naming
+the row kernel and output semantic) and routed through the matching
+algorithm — vectorized galloping for array x array, bit probes for
 array x bitmap (no domain lift), fused word-op + popcount for
-bitmap x bitmap. On TPU the routing is a ``@pl.when``-tagged Pallas kernel
-(``repro.kernels.roaring``) that *skips* the mismatched work per 8 kB tile;
-the XLA reference computes the same three cheap paths masked. Output
-canonicalization is *lazy*: only bitmap-domain rows that cross back under the
-4096 threshold pay the O(2^16) ``row_bits_to_array`` extraction, and that
-whole pass is ``lax.cond``-guarded so array-dominated workloads never touch
-the 2^16-element domain at runtime. Cardinality is maintained with
+bitmap x bitmap, gallop-in-ranges for array x run, range-mask coverage for
+run x bitmap, and a run-domain merge for run x run that never materializes
+bits at all. On TPU the routing is a ``@pl.when``-tagged Pallas kernel
+(``repro.kernels.roaring``) generated from the same table; the XLA reference
+computes the same cheap paths cond-guarded per class. Output
+canonicalization is *best-of-three* (``runOptimize``: array vs bitmap vs run
+by serialized size) and *lazy*: only bitmap-domain rows whose canonical form
+is packed (array or run) pay the O(2^16) extraction, and those passes are
+``lax.cond``-guarded so array- and run-dominated workloads never touch the
+2^16-element domain at runtime. Cardinality is maintained with
 ``lax.population_count`` (the popcnt the paper leans on) fused into the same
 pass, mirroring Algorithm 1/3. See DESIGN.md for the dispatch table.
 
@@ -39,13 +47,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.roaring import dispatch as _D
+
 CHUNK_BITS = 16
 CHUNK_SIZE = 1 << CHUNK_BITS
 ARRAY_MAX = 4096                 # paper's array/bitmap threshold
 ROW_WORDS = 4096                 # 4096 x u16 words = 2^16 bits = 8 kB
+MAX_RUNS = ROW_WORDS // 2        # (start, length-1) pairs per run row
 KEY_SENTINEL = jnp.int32(1 << 20)
 
-KIND_EMPTY, KIND_ARRAY, KIND_BITMAP = 0, 1, 2
+KIND_EMPTY = _D.KIND_EMPTY       # 0
+KIND_ARRAY = _D.KIND_ARRAY       # 1
+KIND_BITMAP = _D.KIND_BITMAP     # 2
+KIND_RUN = _D.KIND_RUN           # 3
+
+# raw row *forms* flowing into the canonicalization engine (how a computed
+# row is currently represented, before best-of-three picks its final kind)
+FORM_ARRAY, FORM_BITS, FORM_RUNS = 0, 1, 2
 
 
 class RoaringSlab(NamedTuple):
@@ -68,6 +86,19 @@ class RoaringSlab(NamedTuple):
     def cardinality(self) -> jax.Array:
         """Sum of per-container counters (paper S2)."""
         return jnp.sum(self.card)
+
+    def size_in_bytes(self) -> jax.Array:
+        """Compressed serialized size (the paper's bits/item metric): 8-byte
+        index header + 4 bytes/container header + per-kind payload — 2*card
+        (array), 8192 (bitmap), 4*n_runs (run). Matches the oracle's
+        ``RoaringBitmap.size_in_bytes`` accounting row for row."""
+        nr = _rows_nruns(self.data, self.kind)
+        payload = jnp.where(self.kind == KIND_ARRAY, 2 * self.card,
+                            jnp.where(self.kind == KIND_BITMAP, 2 * ROW_WORDS,
+                                      jnp.where(self.kind == KIND_RUN, 4 * nr,
+                                                0)))
+        live = (self.kind != KIND_EMPTY).astype(jnp.int32)
+        return 8 + jnp.sum(live * (4 + payload))
 
 
 def empty(capacity: int) -> RoaringSlab:
@@ -97,10 +128,37 @@ def row_array_to_bits(row: jax.Array, card: jax.Array) -> jax.Array:
         vals, mode="drop")
 
 
+def row_run_to_bits(row: jax.Array) -> jax.Array:
+    """Packed run-pair row -> 4096-word coverage bitmap (the range-mask lift:
+    difference-array scatter, O(n_runs + 4096) — never the 2^16 domain)."""
+    return _D.coverage_by_scatter(row.reshape(_D.ROW_SHAPE),
+                                  jnp.int32(MAX_RUNS)).reshape(ROW_WORDS)
+
+
+def _row_run_parts(row: jax.Array):
+    """(starts, length-1, valid) i32 views of a run row's 2048 pair slots.
+    The ``(0xFFFF, 0xFFFF)`` padding fails ``start + length-1 < 2^16``, which
+    every real run satisfies (a full-chunk run is ``(0, 0xFFFF)``)."""
+    p = row.reshape(MAX_RUNS, 2).astype(jnp.int32)
+    s, l = p[:, 0], p[:, 1]
+    return s, l, (s + l) < CHUNK_SIZE
+
+
+def row_nruns(row: jax.Array, kind: jax.Array) -> jax.Array:
+    """Run count of a run row (0 for other kinds)."""
+    _, _, valid = _row_run_parts(row)
+    return jnp.where(kind == KIND_RUN, jnp.sum(valid.astype(jnp.int32)), 0)
+
+
 def row_to_bits(row: jax.Array, card: jax.Array, kind: jax.Array) -> jax.Array:
-    """Uniform bitmap-domain view of a container row (empty -> zeros)."""
+    """Uniform bitmap-domain view of a container row (empty -> zeros).
+
+    Kind-dispatching lift: arrays scatter their packed values, runs scatter
+    their coverage (both O(4096)), bitmaps pass through.
+    """
     as_bits = row_array_to_bits(row, card)
-    return jnp.where(kind == KIND_BITMAP, row, as_bits) * (kind != KIND_EMPTY).astype(jnp.uint16)
+    lifted = jnp.where(kind == KIND_RUN, row_run_to_bits(row), as_bits)
+    return jnp.where(kind == KIND_BITMAP, row, lifted) * (kind != KIND_EMPTY).astype(jnp.uint16)
 
 
 def row_popcount(bits: jax.Array) -> jax.Array:
@@ -131,12 +189,9 @@ def row_bits_to_array(bits: jax.Array) -> jax.Array:
     return out
 
 
-def row_canonicalize(bits: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """bitmap-domain row -> canonical (data, card, kind) per the 4096 rule.
-
-    Array rows are padded with 0xFFFF past ``card`` so the packed prefix plus
-    padding stays globally sorted (binary-search friendly).
-    """
+def _row_canonicalize_2kind(bits: jax.Array):
+    """PR 1's array/bitmap-only canonicalization — retained verbatim for the
+    ``slab_*_bitmap_domain`` A/B baseline (the pre-run architecture)."""
     card = row_popcount(bits)
     as_array = row_bits_to_array(bits)
     as_array = jnp.where(jnp.arange(ROW_WORDS) < card, as_array,
@@ -146,6 +201,83 @@ def row_canonicalize(bits: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     kind = jnp.where(card == 0, KIND_EMPTY,
                      jnp.where(is_bitmap, KIND_BITMAP, KIND_ARRAY))
     return data, card, kind
+
+
+def _row_edges(bits: jax.Array):
+    """(rising, falling') edge bitmaps of a bitmap row: rising marks run
+    starts (set bit, previous clear), falling' the position *after* each run
+    end (clear bit, previous set). Word-carry chained, O(4096)."""
+    prev = jnp.concatenate([jnp.zeros((1,), jnp.uint16), bits[:-1]])
+    shifted = (bits << 1) | (prev >> 15)
+    rising = bits & ~shifted
+    falling = ~bits & shifted
+    return rising, falling
+
+
+def row_nruns_bits(bits: jax.Array) -> jax.Array:
+    """# maximal runs of a bitmap row = popcount of its rising edges."""
+    rising, _ = _row_edges(bits)
+    return row_popcount(rising)
+
+
+def _row_runs_from_bits(bits: jax.Array) -> jax.Array:
+    """Bitmap row -> packed run-pair row.
+
+    One Algorithm-2 extraction over ``rising | falling'`` yields the sorted
+    interleaved sequence ``s0, e0+1, s1, e1+1, ...`` directly (the two edge
+    sets are disjoint); a run ending at 65535 has no falling' bit, so its
+    implicit end is 2^16. O(2^16) — callers guard with ``lax.cond``.
+    """
+    rising, falling = _row_edges(bits)
+    edges = rising | falling
+    pos = row_bits_to_array(edges)
+    n_edges = row_popcount(edges)
+    nr = row_popcount(rising)
+    k = jnp.arange(MAX_RUNS, dtype=jnp.int32)
+    s = jnp.take(pos, 2 * k).astype(jnp.int32)
+    e1 = jnp.where(2 * k + 1 < n_edges,
+                   jnp.take(pos, jnp.minimum(2 * k + 1, ROW_WORDS - 1)).astype(jnp.int32),
+                   CHUNK_SIZE)
+    lm1 = e1 - 1 - s
+    live = k < nr
+    return jnp.stack(
+        [jnp.where(live, s, 0xFFFF), jnp.where(live, lm1, 0xFFFF)],
+        axis=1).reshape(ROW_WORDS).astype(jnp.uint16)
+
+
+def row_canonicalize(bits: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """bitmap-domain row -> canonical (data, card, kind), best-of-three.
+
+    The 2016 paper's ``runOptimize`` rule, applied per row: pick the kind
+    whose serialized size is smallest — 2*card (array, card <= 4096), 8192
+    (bitmap), 4*n_runs (run; strictly smaller only). Array rows are padded
+    with 0xFFFF past ``card`` so the packed prefix plus padding stays
+    globally sorted (binary-search friendly); run rows pad with the
+    impossible pair (0xFFFF, 0xFFFF).
+    """
+    card = row_popcount(bits)
+    nr = row_nruns_bits(bits)
+    kind = _pick_kind(card, nr)
+    as_array = row_bits_to_array(bits)
+    as_array = jnp.where(jnp.arange(ROW_WORDS) < card, as_array,
+                         jnp.uint16(0xFFFF))
+    data = jnp.where(kind == KIND_BITMAP, bits,
+                     jnp.where(kind == KIND_RUN, _row_runs_from_bits(bits),
+                               as_array))
+    return data, card, kind
+
+
+def _pick_kind(card: jax.Array, nruns: jax.Array) -> jax.Array:
+    """Strict best-of-three serialized-size rule (must match the oracle's
+    ``py_roaring._canonical`` bit-for-bit): run iff 4*n_runs is strictly
+    smaller than every alternative; array preferred at the 4096 tie."""
+    other = jnp.where(card <= ARRAY_MAX,
+                      jnp.minimum(2 * card, 2 * ARRAY_MAX), 2 * ARRAY_MAX)
+    run_best = (4 * nruns < other) & (card > 0)
+    return jnp.where(card == 0, KIND_EMPTY,
+                     jnp.where(run_best, KIND_RUN,
+                               jnp.where(card <= ARRAY_MAX, KIND_ARRAY,
+                                         KIND_BITMAP)))
 
 
 # =============================================================================
@@ -214,6 +346,58 @@ def from_dense_array(values: np.ndarray, capacity: int, max_elems: int) -> Roari
     if v.size:
         idx[v.size:] = v[-1]
     return from_indices(jnp.asarray(idx), jnp.asarray(valid), capacity)
+
+
+def from_roaring(rb, capacity: int) -> RoaringSlab:
+    """Host-side bridge: a ``py_roaring.RoaringBitmap`` -> RoaringSlab with
+    the container kinds preserved exactly — run containers land as run rows
+    with no per-element or bitmap materialization (the run-shaped consumers'
+    constructor: KV free/used pools, window/causal/doc mask rows)."""
+    from repro.core import py_roaring as pr
+
+    assert len(rb.keys) <= capacity, (len(rb.keys), capacity)
+    keys = np.full((capacity,), int(KEY_SENTINEL), np.int32)
+    card = np.zeros((capacity,), np.int32)
+    kind = np.zeros((capacity,), np.int32)
+    data = np.zeros((capacity, ROW_WORDS), np.uint16)
+    for i, (k, c) in enumerate(zip(rb.keys, rb.containers)):
+        keys[i] = k
+        card[i] = c.cardinality
+        if isinstance(c, pr.RunContainer):
+            kind[i] = KIND_RUN
+            row = np.full((ROW_WORDS,), 0xFFFF, np.uint16)
+            row[0:2 * c.n_runs:2] = c.starts.astype(np.uint16)
+            row[1:2 * c.n_runs:2] = c.lengths.astype(np.uint16)
+            data[i] = row
+        elif isinstance(c, pr.BitmapContainer):
+            kind[i] = KIND_BITMAP
+            data[i] = c.words.view(np.uint16)        # little-endian u64 -> u16
+        else:
+            kind[i] = KIND_ARRAY
+            row = np.full((ROW_WORDS,), 0xFFFF, np.uint16)
+            row[: c.arr.size] = c.arr
+            data[i] = row
+    return RoaringSlab(keys=jnp.asarray(keys), card=jnp.asarray(card),
+                       kind=jnp.asarray(kind), data=jnp.asarray(data))
+
+
+def from_ranges(ranges, capacity: int) -> RoaringSlab:
+    """Host-side run-row constructor from half-open ``[start, end)`` integer
+    ranges — builds run containers directly (no element materialization)."""
+    from repro.core import py_roaring as pr
+
+    return from_roaring(pr.RoaringBitmap.from_ranges(ranges), capacity)
+
+
+def slab_run_optimize(slab: RoaringSlab) -> RoaringSlab:
+    """Device-side ``runOptimize``: re-canonicalize every row best-of-three
+    through the engine (array rows runify via the O(4096) adjacency scatter,
+    bitmap rows via the cond-guarded edge extraction)."""
+    form = jnp.where(slab.kind == KIND_BITMAP, FORM_BITS,
+                     jnp.where(slab.kind == KIND_RUN, FORM_RUNS, FORM_ARRAY))
+    nr = _rows_nruns(slab.data, slab.kind)
+    return _finalize(slab.keys, slab.card, form, slab.data, slab.data,
+                     slab.data, nr)
 
 
 def to_indices(slab: RoaringSlab, max_out: int) -> tuple[jax.Array, jax.Array]:
@@ -291,8 +475,36 @@ def contains(slab: RoaringSlab, queries: jax.Array) -> jax.Array:
         probe = slab.data[row_i, jnp.clip(l, 0, ROW_WORDS - 1)].astype(
             jnp.int32)
         arr_hit = (l < card) & (probe == lo_i)
+        # run path: binary search the <=2048 pair slots, two gathered u16s
+        # per step. The comparator maps the (0xFFFF, 0xFFFF) padding past
+        # the probe, so no run count is needed. 12 steps cover 2048 runs.
+        # Deliberately not dispatch._run_covered — that searches a row tile
+        # already resident (a full 8 kB gather here); this gathers only two
+        # probed u16s per step, keeping membership log-bounded traffic.
+        # Keep the window-guard/padding semantics in sync with
+        # dispatch._run_upper_bound.
+        def rbody(_, lh):
+            l, h = lh
+            open_ = l < h
+            mid = (l + h) // 2
+            mid_c = jnp.clip(2 * mid, 0, ROW_WORDS - 2)
+            s = slab.data[row_i, mid_c].astype(jnp.int32)
+            ln = slab.data[row_i, mid_c + 1].astype(jnp.int32)
+            key = jnp.where(s + ln < CHUNK_SIZE, s, CHUNK_SIZE)
+            go_right = open_ & (key <= lo_i)
+            return (jnp.where(go_right, mid + 1, l),
+                    jnp.where(open_ & ~go_right, mid, h))
+
+        rl, _ = jax.lax.fori_loop(0, 12, rbody,
+                                  (jnp.int32(0), jnp.int32(MAX_RUNS)))
+        ri = jnp.clip(rl - 1, 0, MAX_RUNS - 1)
+        rs = slab.data[row_i, 2 * ri].astype(jnp.int32)
+        rln = slab.data[row_i, 2 * ri + 1].astype(jnp.int32)
+        run_hit = (rl > 0) & (rs + rln < CHUNK_SIZE) & (lo_i <= rs + rln)
         return jnp.where(kind == KIND_BITMAP, bit_hit,
-                         jnp.where(kind == KIND_ARRAY, arr_hit, False))
+                         jnp.where(kind == KIND_ARRAY, arr_hit,
+                                   jnp.where(kind == KIND_RUN, run_hit,
+                                             False)))
 
     hits = jax.vmap(one)(row_c, lo)
     return hits & key_hit
@@ -314,6 +526,55 @@ def rank(slab: RoaringSlab, x: jax.Array) -> jax.Array:
     last = bits[word_idx] & ((jnp.uint16(2) << (lo & 15).astype(jnp.uint16)) - 1).astype(jnp.uint16)
     in_row = partial_words + lax_popcount(last).astype(jnp.int32)
     return full + jnp.where(hit, in_row, 0)
+
+
+def slab_select(slab: RoaringSlab, j: jax.Array) -> jax.Array:
+    """Value of the j-th (0-based) smallest element — the slab counterpart
+    of the oracle's ``select`` (paper S2 access operation, rank's inverse).
+
+    First-level: binary search the per-container cardinality prefix sums;
+    within the container, dispatch by kind — direct gather for arrays, a
+    run-length prefix-sum search for run rows (log-bounded traffic, like
+    ``contains``), and a one-row bit-rank cumsum for bitmaps. Returns -1 for
+    out-of-range ``j``.
+    """
+    idt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    j = jnp.asarray(j, jnp.int32)
+    csum = jnp.cumsum(slab.card)
+    total = csum[-1] if slab.capacity else jnp.int32(0)
+    row = jnp.searchsorted(csum, j, side="right")
+    row_c = jnp.minimum(row, slab.capacity - 1)
+    j_in = j - jnp.where(row_c > 0, csum[row_c - 1], 0)
+    kind = slab.kind[row_c]
+    drow = slab.data[row_c]
+
+    # array: direct gather
+    arr_val = drow[jnp.clip(j_in, 0, ROW_WORDS - 1)].astype(jnp.int32)
+    # run: search the run-length prefix sums
+    s, l, valid = _row_run_parts(drow)
+    lens = jnp.where(valid, l + 1, 0)
+    lcum = jnp.cumsum(lens)
+    r = jnp.searchsorted(lcum, j_in, side="right")
+    r_c = jnp.minimum(r, MAX_RUNS - 1)
+    run_val = s[r_c] + j_in - (lcum[r_c] - lens[r_c])
+    # bitmap: j_in-th set bit via bit-rank cumsum — the one O(2^16) pass,
+    # cond-guarded so run/array selects keep their log bound
+    def bit_rank(args):
+        bits, j_in = args
+        shifts = jnp.arange(16, dtype=jnp.uint16)
+        flat = ((bits[:, None] >> shifts[None, :]) & jnp.uint16(1)).astype(
+            jnp.int32).reshape(-1)
+        return jnp.searchsorted(jnp.cumsum(flat), j_in + 1,
+                                side="left").astype(jnp.int32)
+
+    bit_pos = jax.lax.cond(kind == KIND_BITMAP, bit_rank,
+                           lambda args: jnp.int32(0), (drow, j_in))
+    lo_val = jnp.where(kind == KIND_ARRAY, arr_val,
+                       jnp.where(kind == KIND_RUN, run_val,
+                                 bit_pos.astype(jnp.int32)))
+    val = (slab.keys[row_c].astype(idt) << CHUNK_BITS) + lo_val.astype(idt)
+    ok = (j >= 0) & (j < total)
+    return jnp.where(ok, val, -1)
 
 
 # =============================================================================
@@ -393,59 +654,275 @@ def _rows_bits_to_array_lazy(bits: jax.Array, need: jax.Array,
                      arrs, jnp.uint16(0xFFFF))
 
 
-def _assemble(keys, data, card):
-    """Final slab assembly: kind from the 4096 rule, dead rows keyed out,
-    rows re-sorted so live keys lead."""
-    live = card > 0
-    is_big = card > ARRAY_MAX
-    kind = jnp.where(~live, KIND_EMPTY,
-                     jnp.where(is_big, KIND_BITMAP, KIND_ARRAY))
+def _rows_nruns(data: jax.Array, kind: jax.Array) -> jax.Array:
+    """Batched ``row_nruns``: per-row run counts (0 for non-run rows)."""
+    p = data.reshape(data.shape[0], MAX_RUNS, 2).astype(jnp.int32)
+    valid = (p[..., 0] + p[..., 1]) < CHUNK_SIZE
+    return jnp.where(kind == KIND_RUN, jnp.sum(valid.astype(jnp.int32), -1), 0)
+
+
+def _runs_from_array_rows(vals: jax.Array, card: jax.Array):
+    """Packed sorted array rows -> packed run-pair rows + run counts.
+
+    Adjacency-difference run detection + two O(4096) scatters per row —
+    never the 2^16 domain.
+    """
+    C = vals.shape[0]
+    v = vals.astype(jnp.int32)
+    slot = jnp.arange(ROW_WORDS, dtype=jnp.int32)[None, :]
+    valid = slot < card[:, None]
+    prev = jnp.concatenate([jnp.full((C, 1), -2, jnp.int32), v[:, :-1]], 1)
+    nxt = jnp.concatenate([v[:, 1:], jnp.full((C, 1), -2, jnp.int32)], 1)
+    isstart = valid & (v != prev + 1)
+    isend = valid & ((slot + 1 >= card[:, None]) | (nxt != v + 1))
+    rid = jnp.cumsum(isstart.astype(jnp.int32), axis=1) - 1
+    rows = jnp.arange(C)[:, None]
+    starts = jnp.zeros((C, MAX_RUNS), jnp.int32).at[
+        rows, jnp.where(isstart, rid, MAX_RUNS)].add(v, mode="drop")
+    pairs = jnp.full((C, ROW_WORDS), 0xFFFF, jnp.uint16)
+    pairs = pairs.at[rows, jnp.where(isstart, 2 * rid, ROW_WORDS)].set(
+        v.astype(jnp.uint16), mode="drop")
+    lm1 = v - jnp.take_along_axis(starts, jnp.clip(rid, 0, MAX_RUNS - 1),
+                                  axis=1)
+    pairs = pairs.at[rows, jnp.where(isend, 2 * rid + 1, ROW_WORDS)].set(
+        lm1.astype(jnp.uint16), mode="drop")
+    return pairs, jnp.sum(isstart.astype(jnp.int32), axis=1)
+
+
+def _arrays_from_runs_rows(pairs: jax.Array, card: jax.Array) -> jax.Array:
+    """Packed run-pair rows -> packed sorted array rows (gather-only:
+    per-slot binary search of the run-length prefix sums)."""
+    C = pairs.shape[0]
+    p = pairs.reshape(C, MAX_RUNS, 2).astype(jnp.int32)
+    s, l = p[..., 0], p[..., 1]
+    valid = (s + l) < CHUNK_SIZE
+    lens = jnp.where(valid, l + 1, 0)
+    cum = jnp.cumsum(lens, axis=1)
+    k = jnp.arange(ROW_WORDS, dtype=jnp.int32)
+
+    def one(cum_r, s_r, lens_r, card_r):
+        r = jnp.searchsorted(cum_r, k, side="right")
+        r_c = jnp.minimum(r, MAX_RUNS - 1)
+        base = cum_r[r_c] - lens_r[r_c]
+        val = s_r[r_c] + k - base
+        return jnp.where(k < card_r, val, 0xFFFF).astype(jnp.uint16)
+
+    return jax.vmap(one)(cum, s, lens, card)
+
+
+def _runs_from_bits_rows_lazy(bits: jax.Array, need: jax.Array) -> jax.Array:
+    """Lazy batched run extraction from bitmap rows: the O(2^16) edge pass
+    runs only when some row's canonical kind is actually run."""
+    masked = jnp.where(need[:, None], bits, jnp.uint16(0))
+    return jax.lax.cond(
+        jnp.any(need),
+        lambda m: jax.vmap(_row_runs_from_bits)(m),
+        lambda m: jnp.full_like(m, 0xFFFF),
+        masked)
+
+
+def _run_merge_row(da: jax.Array, db: jax.Array):
+    """run x run intersection *in run domain* (the run-merge row kernel).
+
+    Every output run closes at an input run end covered by the other side,
+    so the <= na+nb output runs are enumerated by two lane-parallel searches
+    (one per input end), deduped by a strict tie-break, and compacted with a
+    single argsort — O(4096 log 4096), never the 2^16 domain. Returns
+    (pairs_row, card, n_out); if ``n_out`` exceeds the 2048-pair row
+    capacity (pathological alternating micro-runs) the caller falls back to
+    the coverage-bits form.
+    """
+    sa, la, va = _row_run_parts(da)
+    ea = sa + la
+    sb, lb, vb = _row_run_parts(db)
+    eb = sb + lb
+    BIG = jnp.int32(1 << 17)
+    sa_p = jnp.where(va, sa, BIG)
+    sb_p = jnp.where(vb, sb, BIG)
+
+    # candidates closing at a-ends: the b-run containing ea (ties included)
+    j = jnp.searchsorted(sb_p, ea, side="right") - 1
+    jc = jnp.clip(j, 0, MAX_RUNS - 1)
+    av = va & (j >= 0) & (eb[jc] >= ea)
+    a_start = jnp.maximum(sa, sb[jc])
+    # candidates closing strictly inside a-runs at b-ends (tie-deduped)
+    i = jnp.searchsorted(sa_p, eb, side="right") - 1
+    ic = jnp.clip(i, 0, MAX_RUNS - 1)
+    bv = vb & (i >= 0) & (ea[ic] > eb)
+    b_start = jnp.maximum(sb, sa[ic])
+
+    starts = jnp.concatenate([jnp.where(av, a_start, BIG),
+                              jnp.where(bv, b_start, BIG)])
+    ends = jnp.concatenate([jnp.where(av, ea, 0), jnp.where(bv, eb, 0)])
+    card = (jnp.sum(jnp.where(av, ea - a_start + 1, 0))
+            + jnp.sum(jnp.where(bv, eb - b_start + 1, 0)))
+    n_out = jnp.sum(av.astype(jnp.int32)) + jnp.sum(bv.astype(jnp.int32))
+    order = jnp.argsort(starts)
+    ss = starts[order][:MAX_RUNS]
+    ee = ends[order][:MAX_RUNS]
+    live = jnp.arange(MAX_RUNS) < n_out
+    pairs = jnp.stack([jnp.where(live, ss, 0xFFFF),
+                       jnp.where(live, ee - ss, 0xFFFF)],
+                      axis=1).reshape(ROW_WORDS).astype(jnp.uint16)
+    return pairs, card, n_out
+
+
+def _run_merge_rows_lazy(da, db, rr):
+    """Cond-guarded batched run-merge over the rows classified run x run.
+    Returns (pairs, card, n_out, bits_fallback) — the coverage-bits fallback
+    is itself guarded and only materializes for overflowing rows."""
+    C = da.shape[0]
+
+    def merge(args):
+        da, db = args
+        m = rr[:, None]
+        pairs, card, n_out = jax.vmap(_run_merge_row)(
+            jnp.where(m, da, jnp.uint16(0xFFFF)),
+            jnp.where(m, db, jnp.uint16(0xFFFF)))
+        overflow = rr & (n_out > MAX_RUNS)
+
+        def cov(args):
+            da, db = args
+            o = overflow[:, None]
+            return jax.vmap(lambda x, y: row_run_to_bits(x) & row_run_to_bits(y))(
+                jnp.where(o, da, jnp.uint16(0xFFFF)),
+                jnp.where(o, db, jnp.uint16(0xFFFF)))
+
+        bits = jax.lax.cond(jnp.any(overflow), cov,
+                            lambda args: jnp.zeros((C, ROW_WORDS), jnp.uint16),
+                            (da, db))
+        return pairs, card, n_out, bits
+
+    def skip(args):
+        return (jnp.full((C, ROW_WORDS), 0xFFFF, jnp.uint16),
+                jnp.zeros((C,), jnp.int32), jnp.zeros((C,), jnp.int32),
+                jnp.zeros((C, ROW_WORDS), jnp.uint16))
+
+    return jax.lax.cond(jnp.any(rr), merge, skip, (da, db))
+
+
+def _finalize(keys, card, form, arr_rows, bits_rows, runs_rows, runs_nr):
+    """The engine's canonicalization + assembly stage.
+
+    Each computed row arrives in one of three *forms* (packed array /
+    bitmap-domain words / packed run pairs); best-of-three picks the
+    canonical kind per row and the required conversions run vectorized —
+    cheap O(4096) passes unguarded, the two O(2^16) extractions
+    (bits -> array, bits -> runs) ``lax.cond``-guarded. Dead rows are keyed
+    out and rows re-sorted so live keys lead.
+    """
+    is_af = form == FORM_ARRAY
+    is_bf = form == FORM_BITS
+    is_rf = form == FORM_RUNS
+    live_af = is_af & (card > 0)
+    pairs_from_arr, nr_arr = jax.lax.cond(
+        jnp.any(live_af),
+        lambda a: _runs_from_array_rows(a, jnp.where(live_af, card, 0)),
+        lambda a: (jnp.full_like(a, 0xFFFF), jnp.zeros_like(card)),
+        arr_rows)
+    bits_m = jnp.where(is_bf[:, None], bits_rows, jnp.uint16(0))
+    nr_bits = jax.lax.cond(
+        jnp.any(is_bf),
+        lambda b: jax.vmap(row_nruns_bits)(b),
+        lambda b: jnp.zeros_like(card), bits_m)
+    nr = jnp.where(is_af, nr_arr, jnp.where(is_bf, nr_bits, runs_nr))
+    kind = _pick_kind(card, nr)
+
+    need_arr_bits = is_bf & (kind == KIND_ARRAY)
+    arr_from_bits = _rows_bits_to_array_lazy(bits_rows, need_arr_bits, card)
+    need_run_bits = is_bf & (kind == KIND_RUN)
+    runs_from_bits = _runs_from_bits_rows_lazy(bits_rows, need_run_bits)
+    need_arr_runs = is_rf & (kind == KIND_ARRAY)
+    arr_from_runs = jax.lax.cond(
+        jnp.any(need_arr_runs),
+        lambda r: _arrays_from_runs_rows(r, jnp.where(need_arr_runs, card, 0)),
+        lambda r: jnp.full_like(r, 0xFFFF), runs_rows)
+    # a run-form row canonicalizes to bitmap only at the 4*nr == 8192 tie
+    # (nr == 2048 with card > 4096), but the coverage lift must exist or the
+    # bitmap branch below would read the caller's placeholder bits
+    need_bits_runs = is_rf & (kind == KIND_BITMAP)
+    bits_from_runs = jax.lax.cond(
+        jnp.any(need_bits_runs),
+        lambda r: jax.vmap(row_run_to_bits)(
+            jnp.where(need_bits_runs[:, None], r, jnp.uint16(0xFFFF))),
+        lambda r: jnp.zeros_like(r), runs_rows)
+
+    arr_final = jnp.where(is_bf[:, None], arr_from_bits,
+                          jnp.where(is_rf[:, None], arr_from_runs, arr_rows))
+    run_final = jnp.where(is_af[:, None], pairs_from_arr,
+                          jnp.where(is_bf[:, None], runs_from_bits, runs_rows))
+    bits_final = jnp.where(is_rf[:, None], bits_from_runs, bits_rows)
+    data = jnp.where((kind == KIND_BITMAP)[:, None], bits_final,
+                     jnp.where((kind == KIND_RUN)[:, None], run_final,
+                               arr_final))
+    live = kind != KIND_EMPTY
     out_keys = jnp.where(live, keys, KEY_SENTINEL)
     order = jnp.argsort(out_keys)
-    return RoaringSlab(keys=out_keys[order], card=jnp.where(live, card, 0)[order],
+    return RoaringSlab(keys=out_keys[order],
+                       card=jnp.where(live, card, 0)[order],
                        kind=kind[order], data=data[order])
 
 
-def _dispatch_meta(ka, kb, ca, cb) -> jax.Array:
-    """Interleave (kind_a, kind_b, card_a, card_b) per row -> i32[4C]."""
-    return jnp.stack([ka, kb, ca, cb], axis=1).reshape(-1).astype(jnp.int32)
+def _dispatch_meta(ka, kb, ca, cb, ra=None, rb=None) -> jax.Array:
+    """Interleave (kind_a, kind_b, card_a, card_b, nruns_a, nruns_b) per row
+    -> i32[6C] (the registry's scalar-prefetch contract)."""
+    if ra is None:
+        ra = jnp.zeros_like(ka)
+    if rb is None:
+        rb = jnp.zeros_like(kb)
+    return jnp.stack([ka, kb, ca, cb, ra, rb], axis=1).reshape(-1).astype(
+        jnp.int32)
 
 
 def slab_and(a: RoaringSlab, b: RoaringSlab,
              capacity: int | None = None) -> RoaringSlab:
-    """Hybrid-dispatch intersection (paper S4 AND table).
+    """Kind-dispatch intersection over the registry's 4x4 AND grid.
 
     array x array -> vectorized galloping; array x bitmap -> bit probes;
-    bitmap x bitmap -> fused word-AND + popcount (Alg. 3). Array-side outputs
+    bitmap x bitmap -> fused word-AND + popcount (Alg. 3); array x run ->
+    gallop-in-ranges; run x bitmap -> range-mask coverage AND; run x run ->
+    the run-domain merge (never touches bits at all). Mask-semantic outputs
     are provably <= min(card_a, card_b) <= 4096, so they compact straight to
-    packed arrays — no bitmap round trip; only bitmap x bitmap rows that land
-    under the threshold pay the (cond-guarded) Algorithm 2 extraction.
+    packed arrays; only bits-semantic rows whose canonical form is packed
+    pay the (cond-guarded) extraction.
     """
     from repro.kernels.roaring import ops as _kops
     capacity = capacity or min(a.capacity, b.capacity)
     keys = _intersect_keys(a, b, capacity)
     da, ca, ka = _gather_raw(a, keys)
     db, cb, kb = _gather_raw(b, keys)
-    hits, card = _kops.intersect_dispatch(da, db, _dispatch_meta(ka, kb, ca, cb))
-    bb = (ka == KIND_BITMAP) & (kb == KIND_BITMAP)
-    ba = (ka == KIND_BITMAP) & (kb == KIND_ARRAY)
-    src = jnp.where(ba[:, None], db, da)          # hits index the array side
-    arr_rows = jax.vmap(_compact_row)(src, (hits == 1) & ~bb[:, None])
-    need_dc = bb & (card > 0) & (card <= ARRAY_MAX)
-    dc_rows = _rows_bits_to_array_lazy(hits, need_dc, card)
-    data = jnp.where((card > ARRAY_MAX)[:, None], hits,
-                     jnp.where(need_dc[:, None], dc_rows, arr_rows))
-    return _assemble(keys, data, card)
+    ra = _rows_nruns(da, ka)
+    rb = _rows_nruns(db, kb)
+    rr = _D.route_mask("run_merge", ka, kb)
+    # run x run rows are routed around the kernel (masked empty -> skipped)
+    meta = _dispatch_meta(jnp.where(rr, KIND_EMPTY, ka),
+                          jnp.where(rr, KIND_EMPTY, kb), ca, cb, ra, rb)
+    hits, kcard = _kops.intersect_dispatch(da, db, meta)
+    pairs_rr, card_rr, nr_rr, bits_rr = _run_merge_rows_lazy(da, db, rr)
+
+    mask_m = _D.out_mask("mask_a", ka, kb) | _D.out_mask("mask_b", ka, kb)
+    src = jnp.where(_D.out_mask("mask_b", ka, kb)[:, None], db, da)
+    arr_rows = jax.vmap(_compact_row)(src, (hits == 1) & mask_m[:, None])
+    card = jnp.where(rr, card_rr, kcard)
+    overflow = rr & (nr_rr > MAX_RUNS)
+    form = jnp.where(rr & ~overflow, FORM_RUNS,
+                     jnp.where(_D.out_mask("bits", ka, kb) | overflow,
+                               FORM_BITS, FORM_ARRAY))
+    bits_rows = jnp.where(rr[:, None], bits_rr, hits)
+    return _finalize(keys, card, form, arr_rows, bits_rows, pairs_rr, nr_rr)
 
 
 def slab_and_card(a: RoaringSlab, b: RoaringSlab) -> jax.Array:
     """|A ∩ B| without materializing a result slab (Alg. 3 line 5 for free:
-    the dispatch kernel's fused popcount/hit-count is the entire answer)."""
+    the dispatch kernel's fused popcount/hit-count is the entire answer —
+    run x run rows use the in-kernel coverage-AND form, no merge pass)."""
     from repro.kernels.roaring import ops as _kops
     keys = _intersect_keys(a, b, min(a.capacity, b.capacity))
     da, ca, ka = _gather_raw(a, keys)
     db, cb, kb = _gather_raw(b, keys)
-    _, card = _kops.intersect_dispatch(da, db, _dispatch_meta(ka, kb, ca, cb))
+    meta = _dispatch_meta(ka, kb, ca, cb, _rows_nruns(da, ka),
+                          _rows_nruns(db, kb))
+    _, card = _kops.intersect_dispatch(da, db, meta)
     return jnp.sum(card)
 
 
@@ -519,16 +996,16 @@ def _row_merge_sparse(da, ca, db, cb, *, xor: bool):
 
 def _union_like(a: RoaringSlab, b: RoaringSlab, capacity: int,
                 word_op, xor: bool) -> RoaringSlab:
-    """Shared OR/XOR pipeline: sparse array pairs merge in array domain,
-    everything else goes through the bitmap domain. Both passes (and the
-    down-conversion) are lax.cond-guarded symmetrically, so an all-array
-    workload never lifts and an all-bitmap workload never sorts."""
+    """Shared OR/XOR pipeline, routed by the registry's union policy:
+    sparse array pairs merge in array domain; everything else goes through
+    the bitmap domain with the kind-dispatching lift (run rows lift via the
+    O(4096) coverage scatter, not the 2^16 domain). Both passes are
+    lax.cond-guarded symmetrically, and the engine's best-of-three
+    finalization re-runs run-shaped outputs."""
     keys = _merge_keys(a, b, capacity)
     da, ca, ka = _gather_raw(a, keys)
     db, cb, kb = _gather_raw(b, keys)
-    arrayish = (ka != KIND_BITMAP) & (kb != KIND_BITMAP)
-    small = arrayish & (ca + cb <= ARRAY_MAX)
-    use_bitmap = ~small & ((ka != KIND_EMPTY) | (kb != KIND_EMPTY))
+    small, use_bitmap = _D.union_route(ka, kb, ca, cb, ARRAY_MAX)
 
     def merge_pass(args):
         da, ca, db, cb = args
@@ -554,11 +1031,9 @@ def _union_like(a: RoaringSlab, b: RoaringSlab, capacity: int,
     bits, bcard = jax.lax.cond(jnp.any(use_bitmap), bitmap_pass, skip,
                                (da, ca, ka, db, cb, kb))
     card = jnp.where(use_bitmap, bcard, merge_card)
-    need_dc = use_bitmap & (card > 0) & (card <= ARRAY_MAX)
-    dc_rows = _rows_bits_to_array_lazy(bits, need_dc, card)
-    data = jnp.where((card > ARRAY_MAX)[:, None], bits,
-                     jnp.where(need_dc[:, None], dc_rows, merge_rows))
-    return _assemble(keys, data, card)
+    form = jnp.where(use_bitmap, FORM_BITS, FORM_ARRAY)
+    return _finalize(keys, card, form, merge_rows, bits,
+                     jnp.full_like(bits, 0xFFFF), jnp.zeros_like(card))
 
 
 def slab_or(a: RoaringSlab, b: RoaringSlab,
@@ -575,30 +1050,36 @@ def slab_xor(a: RoaringSlab, b: RoaringSlab,
 
 def slab_andnot(a: RoaringSlab, b: RoaringSlab,
                 capacity: int | None = None) -> RoaringSlab:
-    """A \\ B with per-kind dispatch: array-A rows probe B directly (result
-    provably <= card_a <= 4096, stays array); only bitmap-A rows go through
-    the (cond-guarded) bitmap domain."""
+    """A \\ B, routed by the registry's andnot policy: array-A rows probe B
+    in place whatever B's kind — binary search for array B, bit probe for
+    bitmap B, gallop-in-ranges for run B (result provably <= card_a <= 4096,
+    stays packed); bitmap- and run-A rows go through the (cond-guarded)
+    bitmap domain with the cheap run lift."""
     capacity = capacity or a.capacity
     keys = _pad_keys(a.keys, capacity)
     da, ca, ka = _gather_raw(a, keys)
     db, cb, kb = _gather_raw(b, keys)
     slot = jnp.arange(ROW_WORDS, dtype=jnp.int32)
+    probe_a, lift_a = _D.andnot_route(ka, kb)
 
-    def probe_row(dav, cav, dbv, cbv, kbv):
+    def probe_row(dav, cav, dbv, cbv, kbv, rbv):
         pos = jnp.searchsorted(dbv, dav)
         pos_c = jnp.clip(pos, 0, ROW_WORDS - 1)
         arr_in = (dbv[pos_c] == dav) & (pos < cbv)
         v = dav.astype(jnp.int32)
         word = dbv[v >> 4].astype(jnp.int32)
         bit_in = ((word >> (v & 15)) & 1) == 1
+        run_in = _D._run_covered(dbv.reshape(_D.ROW_SHAPE), rbv,
+                                 v.reshape(_D.ROW_SHAPE)).reshape(ROW_WORDS)
         in_b = jnp.where(kbv == KIND_BITMAP, bit_in,
-                         jnp.where(kbv == KIND_ARRAY, arr_in, False))
+                         jnp.where(kbv == KIND_ARRAY, arr_in,
+                                   jnp.where(kbv == KIND_RUN, run_in, False)))
         return (slot < cav) & ~in_b
 
-    keep = jax.vmap(probe_row)(da, ca, db, cb, kb) & (ka == KIND_ARRAY)[:, None]
+    rb = _rows_nruns(db, kb)
+    keep = jax.vmap(probe_row)(da, ca, db, cb, kb, rb) & probe_a[:, None]
     arr_rows = jax.vmap(_compact_row)(da, keep)
     acard = jnp.sum(keep.astype(jnp.int32), axis=1)
-    a_bmp = ka == KIND_BITMAP
 
     def bitmap_pass(args):
         da, ca, ka, db, cb, kb = args
@@ -610,14 +1091,12 @@ def slab_andnot(a: RoaringSlab, b: RoaringSlab,
         return (jnp.zeros((keys.shape[0], ROW_WORDS), jnp.uint16),
                 jnp.zeros((keys.shape[0],), jnp.int32))
 
-    bits, bcard = jax.lax.cond(jnp.any(a_bmp), bitmap_pass, skip,
+    bits, bcard = jax.lax.cond(jnp.any(lift_a), bitmap_pass, skip,
                                (da, ca, ka, db, cb, kb))
-    card = jnp.where(a_bmp, bcard, acard)
-    need_dc = a_bmp & (card > 0) & (card <= ARRAY_MAX)
-    dc_rows = _rows_bits_to_array_lazy(bits, need_dc, card)
-    data = jnp.where((card > ARRAY_MAX)[:, None], bits,
-                     jnp.where(need_dc[:, None], dc_rows, arr_rows))
-    return _assemble(keys, data, card)
+    card = jnp.where(lift_a, bcard, acard)
+    form = jnp.where(lift_a, FORM_BITS, FORM_ARRAY)
+    return _finalize(keys, card, form, arr_rows, bits,
+                     jnp.full_like(bits, 0xFFFF), jnp.zeros_like(card))
 
 
 # =============================================================================
@@ -645,7 +1124,7 @@ def _binary_bits_op(a: RoaringSlab, b: RoaringSlab, word_op, capacity: int,
     bits_a, pa = _gather_rows(a, keys)
     bits_b, pb = _gather_rows(b, keys)
     out_bits = word_op(bits_a, bits_b)
-    data, card, kind = jax.vmap(row_canonicalize)(out_bits)
+    data, card, kind = jax.vmap(_row_canonicalize_2kind)(out_bits)
     live = card > 0
     if intersection:
         live = live & pa & pb
@@ -673,9 +1152,13 @@ def slab_or_bitmap_domain(a: RoaringSlab, b: RoaringSlab,
 
 
 def union_many_slabs(slabs: list[RoaringSlab], capacity: int) -> RoaringSlab:
-    """Algorithm 4, TPU form: key-aligned segmented OR-reduction in bitmap
-    domain with cardinality computed once at the end (deferred popcount).
-    The final array extraction is the cond-guarded lazy pass."""
+    """Algorithm 4, TPU form, routed through the engine: key-aligned
+    segmented OR-reduction with the kind-dispatching lift (array rows
+    scatter, run rows range-mask — both O(4096), no unconditional
+    bitmap-domain materialization of packed inputs) and cardinality computed
+    once at the end (deferred popcount). Final canonicalization is the
+    engine's best-of-three pass, so run-shaped unions (e.g. the KV free
+    pool) come back out as run rows."""
     all_keys = jnp.concatenate([s.keys for s in slabs])
     srt = jnp.sort(all_keys)
     dup = jnp.concatenate([jnp.array([False]), srt[1:] == srt[:-1]])
@@ -685,7 +1168,6 @@ def union_many_slabs(slabs: list[RoaringSlab], capacity: int) -> RoaringSlab:
         bits, _ = _gather_rows(s, keys)
         acc = jnp.bitwise_or(acc, bits)               # deferred cardinality
     card = jax.vmap(row_popcount)(acc)
-    need_dc = (card > 0) & (card <= ARRAY_MAX)
-    arr_rows = _rows_bits_to_array_lazy(acc, need_dc, card)
-    data = jnp.where((card > ARRAY_MAX)[:, None], acc, arr_rows)
-    return _assemble(keys, data, card)
+    form = jnp.full_like(card, FORM_BITS)
+    return _finalize(keys, card, form, jnp.full_like(acc, 0xFFFF), acc,
+                     jnp.full_like(acc, 0xFFFF), jnp.zeros_like(card))

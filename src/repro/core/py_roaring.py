@@ -6,13 +6,28 @@ paper's data layout and Algorithms 1-4 exactly:
   * two-level index: sorted 16-bit keys -> containers of the low 16 bits;
   * array containers (sorted packed u16, card <= 4096) vs bitmap containers
     (2^16-bit bitmap as 1024 x u64, card > 4096);
+  * run containers (sorted ``(start, length-1)`` u16 pairs, per the follow-up
+    paper *Consistently faster and smaller compressed bitmaps with Roaring*,
+    Lemire, Ssi-Yan-Kai & Kaser 2016), chosen by the ``runOptimize``
+    best-of-three serialized-size rule;
   * per-container cardinality counters;
   * hybrid AND/OR per container-type pair, including the cardinality-first
     bitmap AND (Alg. 3), fused popcount union (Alg. 1), galloping array
     intersection with the 64x ratio rule, and the union-through-bitmap rule;
+  * full cross-kind algebra over the 3x3 container-type grid via the
+    declarative ``_AND/_OR/_XOR/_ANDNOT`` pair-dispatch tables (the oracle
+    mirror of the slab layer's kind-dispatch engine);
   * Alg. 2 set-bit extraction (both the faithful ``w & -w`` loop and a
     vectorized equivalent);
   * Alg. 4 many-way union with a key min-heap and deferred cardinality.
+
+Canonical discipline: ``RoaringBitmap`` *set-algebra outputs* are always
+best-of-three canonical (array vs bitmap vs run by serialized size — the 2016
+paper's ``runOptimize`` applied eagerly), which is what makes this module the
+bit-identical kind reference for ``jax_roaring``. Bulk constructors
+(`from_sorted_unique`) and the 2014 add/remove dynamics keep the original
+2-kind behavior; runs enter via ``from_ranges`` / ``run_optimize`` / op
+outputs.
 
 NumPy stands in for 64-bit words + popcnt (``np.bitwise_count``), mirroring
 how the paper's Java implementation leans on ``Long.bitCount``.
@@ -189,13 +204,181 @@ class BitmapContainer:
         return iter(self.to_array().tolist())
 
 
-Container = Union[ArrayContainer, BitmapContainer]
+def runs_from_array(arr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Sorted unique values -> (starts, lengths-1) of maximal runs."""
+    a = np.asarray(arr, dtype=np.int64)
+    if a.size == 0:
+        return (np.empty(0, np.int64), np.empty(0, np.int64))
+    brk = np.nonzero(np.diff(a) != 1)[0]
+    starts = a[np.concatenate(([0], brk + 1))]
+    ends = a[np.concatenate((brk, [a.size - 1]))]
+    return starts, ends - starts
+
+
+class RunContainer:
+    """Sorted, disjoint, non-adjacent runs of consecutive 16-bit integers.
+
+    The 2016 paper's third container kind: run ``i`` covers
+    ``[starts[i], starts[i] + lengths[i]]`` (``lengths`` stores length-1, the
+    serialized u16 format — a single run of all 2^16 values is
+    ``(0, 0xFFFF)``). Serialized size is 4 bytes per run.
+    """
+
+    __slots__ = ("starts", "lengths")
+
+    def __init__(self, starts: Optional[np.ndarray] = None,
+                 lengths: Optional[np.ndarray] = None):
+        self.starts = (np.empty(0, np.int64) if starts is None
+                       else np.asarray(starts, dtype=np.int64))
+        self.lengths = (np.empty(0, np.int64) if lengths is None
+                        else np.asarray(lengths, dtype=np.int64))
+
+    @property
+    def n_runs(self) -> int:
+        return int(self.starts.size)
+
+    @property
+    def cardinality(self) -> int:
+        return int(self.lengths.sum() + self.starts.size)
+
+    def size_in_bytes(self) -> int:
+        return 4 * self.n_runs  # two u16 per run
+
+    def contains(self, x: int) -> bool:
+        i = int(np.searchsorted(self.starts, x, side="right")) - 1
+        return i >= 0 and x <= int(self.starts[i] + self.lengths[i])
+
+    def clone(self) -> "RunContainer":
+        return RunContainer(self.starts.copy(), self.lengths.copy())
+
+    def rank(self, low: int) -> int:
+        """# of elements <= low (the run analogue of the partial popcount)."""
+        i = int(np.searchsorted(self.starts, low, side="right"))
+        full = int((self.lengths[:i] + 1).sum())
+        if i > 0:
+            e = int(self.starts[i - 1] + self.lengths[i - 1])
+            full -= max(0, e - low)
+        return full
+
+    def add(self, x: int) -> "Container":
+        """Insert one value: extend/merge runs; re-canonicalize by size."""
+        if self.contains(x):
+            return self
+        i = int(np.searchsorted(self.starts, x, side="right")) - 1
+        touch_prev = i >= 0 and int(self.starts[i] + self.lengths[i]) == x - 1
+        touch_next = (i + 1 < self.n_runs and int(self.starts[i + 1]) == x + 1)
+        if touch_prev and touch_next:
+            self.lengths[i] += self.lengths[i + 1] + 2
+            self.starts = np.delete(self.starts, i + 1)
+            self.lengths = np.delete(self.lengths, i + 1)
+        elif touch_prev:
+            self.lengths[i] += 1
+        elif touch_next:
+            self.starts[i + 1] -= 1
+            self.lengths[i + 1] += 1
+        else:
+            self.starts = np.insert(self.starts, i + 1, x)
+            self.lengths = np.insert(self.lengths, i + 1, 0)
+        return _canonical(self)
+
+    def remove(self, x: int) -> "Container":
+        """Delete one value: trim/split runs; re-canonicalize by size."""
+        i = int(np.searchsorted(self.starts, x, side="right")) - 1
+        if i < 0 or x > int(self.starts[i] + self.lengths[i]):
+            return self
+        s, e = int(self.starts[i]), int(self.starts[i] + self.lengths[i])
+        if s == e:                                   # singleton run
+            self.starts = np.delete(self.starts, i)
+            self.lengths = np.delete(self.lengths, i)
+        elif x == s:
+            self.starts[i] += 1
+            self.lengths[i] -= 1
+        elif x == e:
+            self.lengths[i] -= 1
+        else:                                        # split
+            self.starts = np.insert(self.starts, i + 1, x + 1)
+            self.lengths = np.insert(self.lengths, i + 1, e - x - 1)
+            self.lengths[i] = x - 1 - s
+        return _canonical(self)
+
+    def to_array(self) -> np.ndarray:
+        if self.n_runs == 0:
+            return np.empty(0, dtype=_U16)
+        parts = [np.arange(s, s + l + 1)
+                 for s, l in zip(self.starts.tolist(), self.lengths.tolist())]
+        return np.concatenate(parts).astype(_U16)
+
+    def to_bitmap_words(self) -> np.ndarray:
+        """Run coverage as 1024 u64 words (the range-mask lift)."""
+        flags = np.zeros(CHUNK_SIZE + 1, dtype=np.int8)
+        np.add.at(flags, self.starts, 1)
+        np.add.at(flags, self.starts + self.lengths + 1, -1)
+        bits = np.cumsum(flags[:CHUNK_SIZE]) > 0
+        return np.packbits(bits, bitorder="little").view(_U64)
+
+    def iter_values(self) -> Iterator[int]:
+        for s, l in zip(self.starts.tolist(), self.lengths.tolist()):
+            yield from range(s, s + l + 1)
+
+
+Container = Union[ArrayContainer, BitmapContainer, RunContainer]
+
+
+def n_runs_of(c: Container) -> int:
+    """Number of maximal runs a container's value set splits into."""
+    if isinstance(c, RunContainer):
+        return c.n_runs
+    if isinstance(c, BitmapContainer):
+        # rising-edge popcount: a run starts where a bit is set and its
+        # predecessor is clear — O(1024 words), no value materialization
+        w = c.words
+        carry = np.concatenate(([_U64(0)], w[:-1] >> _U64(63)))
+        rising = w & ~((w << _U64(1)) | carry)
+        return int(np.bitwise_count(rising).sum())
+    arr = c.arr
+    if arr.size == 0:
+        return 0
+    return int(np.count_nonzero(np.diff(arr.astype(np.int64)) != 1)) + 1
+
+
+def _canonical(c: Container) -> Container:
+    """``runOptimize`` best-of-three: pick array vs bitmap vs run by strict
+    serialized size (2*card vs 8192 vs 4*n_runs); run only when strictly
+    smaller, array preferred at the 4096 tie (paper: > 4096 converts)."""
+    card = c.cardinality
+    if card == 0:
+        return ArrayContainer()
+    nr = n_runs_of(c)
+    other = min(2 * card, 8 * BITMAP_WORDS) if card <= ARRAY_MAX \
+        else 8 * BITMAP_WORDS
+    if 4 * nr < other:
+        if isinstance(c, RunContainer):
+            return c
+        arr = c.arr if isinstance(c, ArrayContainer) else c.to_array()
+        return RunContainer(*runs_from_array(arr))
+    if card <= ARRAY_MAX:
+        if isinstance(c, ArrayContainer):
+            return c
+        return ArrayContainer(c.to_array())
+    if isinstance(c, BitmapContainer):
+        return c
+    if isinstance(c, RunContainer):
+        return BitmapContainer(c.to_bitmap_words(), card)
+    return BitmapContainer(array_to_bitmap(c.arr), card)
 
 
 def _maybe_to_array(c: BitmapContainer) -> Container:
     if c.cardinality <= ARRAY_MAX:
         return ArrayContainer(bitmap_to_array(c.words))
     return c
+
+
+def _words_of(c: Container) -> np.ndarray:
+    if isinstance(c, BitmapContainer):
+        return c.words
+    if isinstance(c, RunContainer):
+        return c.to_bitmap_words()
+    return array_to_bitmap(c.arr)
 
 
 # =============================================================================
@@ -310,57 +493,175 @@ def union_array_array(a: ArrayContainer, b: ArrayContainer) -> Container:
     return BitmapContainer(words, c)
 
 
-def container_or(a: Container, b: Container) -> Container:
-    if isinstance(a, BitmapContainer):
-        if isinstance(b, BitmapContainer):
-            return union_bitmap_bitmap(a, b)
-        return union_array_bitmap(b, a)
+def intersect_run_run(a: RunContainer, b: RunContainer) -> RunContainer:
+    """Run-merge intersection (2016 paper): two-pointer sweep over the two
+    sorted run lists; each output run is the overlap of one pair."""
+    starts: List[int] = []
+    lengths: List[int] = []
+    i = j = 0
+    na, nb = a.n_runs, b.n_runs
+    while i < na and j < nb:
+        sa, ea = int(a.starts[i]), int(a.starts[i] + a.lengths[i])
+        sb, eb = int(b.starts[j]), int(b.starts[j] + b.lengths[j])
+        s, e = max(sa, sb), min(ea, eb)
+        if s <= e:
+            starts.append(s)
+            lengths.append(e - s)
+        if ea <= eb:            # the run that closes first advances
+            i += 1
+        else:
+            j += 1
+    return RunContainer(np.asarray(starts, np.int64),
+                        np.asarray(lengths, np.int64))
+
+
+def union_run_run(a: RunContainer, b: RunContainer) -> RunContainer:
+    """Run-merge union: merge the two sorted run lists, coalescing overlap
+    and adjacency as we go."""
+    starts: List[int] = []
+    lengths: List[int] = []
+    i = j = 0
+    na, nb = a.n_runs, b.n_runs
+    while i < na or j < nb:
+        if j >= nb or (i < na and int(a.starts[i]) <= int(b.starts[j])):
+            s, e = int(a.starts[i]), int(a.starts[i] + a.lengths[i])
+            i += 1
+        else:
+            s, e = int(b.starts[j]), int(b.starts[j] + b.lengths[j])
+            j += 1
+        if starts and s <= int(starts[-1]) + int(lengths[-1]) + 1:
+            lengths[-1] = max(lengths[-1], e - starts[-1])
+        else:
+            starts.append(s)
+            lengths.append(e - s)
+    return RunContainer(np.asarray(starts, np.int64),
+                        np.asarray(lengths, np.int64))
+
+
+def intersect_run_array(r: RunContainer, a: ArrayContainer) -> ArrayContainer:
+    """Gallop-in-ranges: each array value binary-searches the run starts
+    (S4's galloping adapted to interval endpoints)."""
+    if a.arr.size == 0 or r.n_runs == 0:
+        return ArrayContainer()
+    v = a.arr.astype(np.int64)
+    i = np.searchsorted(r.starts, v, side="right") - 1
+    ic = np.maximum(i, 0)
+    hit = (i >= 0) & (v <= r.starts[ic] + r.lengths[ic])
+    return ArrayContainer(a.arr[hit])
+
+
+def intersect_run_bitmap(r: RunContainer, b: BitmapContainer) -> Container:
+    """Range-mask: AND the bitmap words with the run coverage (Alg. 3 with a
+    synthesized operand), then materialize by the 4096 rule."""
+    return _materialize_words(np.bitwise_and(r.to_bitmap_words(), b.words))
+
+
+def _materialize_words(words: np.ndarray) -> Container:
+    """Word-domain result -> container by the 4096 rule (Alg. 3 tail)."""
+    c = popcount_words(words)
+    if c > ARRAY_MAX:
+        return BitmapContainer(words, c)
+    return ArrayContainer(bitmap_to_array(words))
+
+
+def _andnot_words(a: Container, b: Container) -> Container:
+    return _materialize_words(
+        np.bitwise_and(_words_of(a), np.bitwise_not(_words_of(b))))
+
+
+def andnot_array_any(a: ArrayContainer, b: Container) -> ArrayContainer:
+    """A \\ B with array A: probe each value of A in B (any B kind)."""
+    if a.arr.size == 0:
+        return ArrayContainer()
+    if isinstance(b, ArrayContainer):
+        if b.arr.size == 0:
+            return ArrayContainer(a.arr.copy())
+        pos = np.searchsorted(b.arr, a.arr)
+        pos_c = np.minimum(pos, b.arr.size - 1)
+        mask = (pos < b.arr.size) & (b.arr[pos_c] == a.arr)
+        return ArrayContainer(a.arr[~mask])
     if isinstance(b, BitmapContainer):
-        return union_array_bitmap(a, b)
-    return union_array_array(a, b)
+        idx = a.arr.astype(np.int64)
+        hits = (b.words[idx >> 6] >> (idx & 63).astype(_U64)) & _U64(1)
+        return ArrayContainer(a.arr[~hits.astype(bool)])
+    if b.n_runs == 0:
+        return ArrayContainer(a.arr.copy())
+    v = a.arr.astype(np.int64)
+    i = np.searchsorted(b.starts, v, side="right") - 1
+    ic = np.maximum(i, 0)
+    keep = ~((i >= 0) & (v <= b.starts[ic] + b.lengths[ic]))
+    return ArrayContainer(a.arr[keep])
+
+
+def _xor_words(a: Container, b: Container) -> Container:
+    return _materialize_words(np.bitwise_xor(_words_of(a), _words_of(b)))
+
+
+def _or_words(a: Container, b: Container) -> Container:
+    return _materialize_words(np.bitwise_or(_words_of(a), _words_of(b)))
+
+
+# --- declarative pair-dispatch tables (the oracle mirror of the slab
+# engine's kind-dispatch registry): keyed by (type_a, type_b); ``swap``-style
+# symmetric entries are generated, so adding a 4th kind is new rows, not new
+# branch chains. -------------------------------------------------------------
+
+_A, _B, _R = ArrayContainer, BitmapContainer, RunContainer
+
+_AND_TABLE = {
+    (_A, _A): intersect_array_array,
+    (_A, _B): intersect_array_bitmap,
+    (_B, _A): lambda a, b: intersect_array_bitmap(b, a),
+    (_B, _B): intersect_bitmap_bitmap,
+    (_R, _R): intersect_run_run,
+    (_R, _A): intersect_run_array,
+    (_A, _R): lambda a, b: intersect_run_array(b, a),
+    (_R, _B): intersect_run_bitmap,
+    (_B, _R): lambda a, b: intersect_run_bitmap(b, a),
+}
+
+_OR_TABLE = {
+    (_A, _A): union_array_array,
+    (_A, _B): lambda a, b: union_array_bitmap(a, b),
+    (_B, _A): lambda a, b: union_array_bitmap(b, a),
+    (_B, _B): union_bitmap_bitmap,
+    (_R, _R): union_run_run,
+    (_R, _A): _or_words,
+    (_A, _R): _or_words,
+    (_R, _B): _or_words,
+    (_B, _R): _or_words,
+}
+
+_ANDNOT_TABLE = {
+    (_A, _A): andnot_array_any,
+    (_A, _B): andnot_array_any,
+    (_A, _R): andnot_array_any,
+    (_B, _A): _andnot_words,
+    (_B, _B): _andnot_words,
+    (_B, _R): _andnot_words,
+    (_R, _A): _andnot_words,
+    (_R, _B): _andnot_words,
+    (_R, _R): _andnot_words,
+}
+
+
+def container_or(a: Container, b: Container) -> Container:
+    return _OR_TABLE[(type(a), type(b))](a, b)
 
 
 def container_and(a: Container, b: Container) -> Container:
-    if isinstance(a, BitmapContainer):
-        if isinstance(b, BitmapContainer):
-            return intersect_bitmap_bitmap(a, b)
-        return intersect_array_bitmap(b, a)
-    if isinstance(b, BitmapContainer):
-        return intersect_array_bitmap(a, b)
-    return intersect_array_array(a, b)
+    return _AND_TABLE[(type(a), type(b))](a, b)
 
 
 def container_xor(a: Container, b: Container) -> Container:
     """XOR (extension — the paper focuses on AND/OR; needed by the framework
     for mask algebra). Same dense/sparse materialization discipline."""
-    wa = a.words if isinstance(a, BitmapContainer) else array_to_bitmap(a.arr)
-    wb = b.words if isinstance(b, BitmapContainer) else array_to_bitmap(b.arr)
-    words = np.bitwise_xor(wa, wb)
-    c = popcount_words(words)
-    if c > ARRAY_MAX:
-        return BitmapContainer(words, c)
-    return ArrayContainer(bitmap_to_array(words))
+    return _xor_words(a, b)
 
 
 def container_andnot(a: Container, b: Container) -> Container:
     """A AND NOT B (extension; used for e.g. KV-page reclamation)."""
-    if isinstance(a, ArrayContainer):
-        if isinstance(b, BitmapContainer):
-            idx = a.arr.astype(np.int64)
-            hits = (b.words[idx >> 6] >> (idx & 63).astype(_U64)) & _U64(1)
-            return ArrayContainer(a.arr[~hits.astype(bool)])
-        pos = np.searchsorted(b.arr, a.arr)
-        pos_c = np.minimum(pos, max(b.arr.size - 1, 0))
-        if b.arr.size == 0:
-            return ArrayContainer(a.arr.copy())
-        mask = (pos < b.arr.size) & (b.arr[pos_c] == a.arr)
-        return ArrayContainer(a.arr[~mask])
-    wb = b.words if isinstance(b, BitmapContainer) else array_to_bitmap(b.arr)
-    words = np.bitwise_and(a.words, np.bitwise_not(wb))
-    c = popcount_words(words)
-    if c > ARRAY_MAX:
-        return BitmapContainer(words, c)
-    return ArrayContainer(bitmap_to_array(words))
+    return _ANDNOT_TABLE[(type(a), type(b))](a, b)
 
 
 # =============================================================================
@@ -411,6 +712,50 @@ class RoaringBitmap:
                 rb.keys.append(key)
                 rb.containers.append(ArrayContainer(chunk.copy()))
         return rb
+
+    @classmethod
+    def from_ranges(cls, ranges: Sequence[Tuple[int, int]]) -> "RoaringBitmap":
+        """Build run containers directly from half-open ``[start, end)``
+        ranges — no per-element materialization (the run-shaped constructor
+        the 2016 paper's workloads call for). Ranges may span chunks; they
+        are split at 2^16 boundaries. Overlapping/adjacent ranges coalesce.
+        Each container is best-of-three canonicalized."""
+        spans = sorted((int(s), int(e)) for s, e in ranges if e > s)
+        merged: List[List[int]] = []
+        for s, e in spans:
+            if merged and s <= merged[-1][1]:
+                merged[-1][1] = max(merged[-1][1], e)
+            else:
+                merged.append([s, e])
+        per_key: dict = {}
+        for s, e in merged:
+            k = s >> CHUNK_BITS
+            while s < e:
+                chunk_end = min(e, (k + 1) << CHUNK_BITS)
+                lo = s & (CHUNK_SIZE - 1)
+                per_key.setdefault(k, ([], []))
+                per_key[k][0].append(lo)
+                per_key[k][1].append(chunk_end - s - 1)
+                s = chunk_end
+                k += 1
+        rb = cls()
+        for k in sorted(per_key):
+            starts, lengths = per_key[k]
+            rb.keys.append(k)
+            rb.containers.append(_canonical(RunContainer(
+                np.asarray(starts, np.int64), np.asarray(lengths, np.int64))))
+        return rb
+
+    @classmethod
+    def from_range(cls, lo: int, hi: int) -> "RoaringBitmap":
+        """Single contiguous ``[lo, hi)`` range (window/causal mask rows)."""
+        return cls.from_ranges([(lo, hi)])
+
+    def run_optimize(self) -> "RoaringBitmap":
+        """The 2016 paper's ``runOptimize``: re-canonicalize every container
+        best-of-three (array vs bitmap vs run by serialized size), in place."""
+        self.containers = [_canonical(c) for c in self.containers]
+        return self
 
     # -- access operations (paper S3) ------------------------------------------
     def _find_key(self, key: int) -> int:
@@ -471,6 +816,8 @@ class RoaringBitmap:
             elif k == key:
                 if isinstance(c, ArrayContainer):
                     total += int(np.searchsorted(c.arr, _U16(low), side="right"))
+                elif isinstance(c, RunContainer):
+                    total += c.rank(low)
                 else:
                     full_words = low >> 6
                     total += popcount_words(c.words[:full_words])
@@ -488,6 +835,13 @@ class RoaringBitmap:
             if j < c.cardinality:
                 if isinstance(c, ArrayContainer):
                     return (k << CHUNK_BITS) | int(c.arr[j])
+                if isinstance(c, RunContainer):
+                    # run-length prefix sums, O(log n_runs) — the KV
+                    # allocator's free.select(0) pops from a run pool
+                    cum = np.cumsum(c.lengths + 1)
+                    r = int(np.searchsorted(cum, j, side="right"))
+                    prev = int(cum[r - 1]) if r else 0
+                    return (k << CHUNK_BITS) | int(c.starts[r] + j - prev)
                 return (k << CHUNK_BITS) | int(c.to_array()[j])
             j -= c.cardinality
         raise AssertionError("unreachable")
@@ -509,7 +863,7 @@ class RoaringBitmap:
                 c = op(self.containers[i], other.containers[j])
                 if c.cardinality > 0:
                     out.keys.append(k)
-                    out.containers.append(c)
+                    out.containers.append(_canonical(c))
             return out
         union = np.union1d(ka, kb)
         pa = np.searchsorted(ka, union)
@@ -528,7 +882,7 @@ class RoaringBitmap:
                 c = other.containers[j].clone()
             if c.cardinality > 0:
                 out.keys.append(k)
-                out.containers.append(c)
+                out.containers.append(_canonical(c))
         return out
 
     def __and__(self, other: "RoaringBitmap") -> "RoaringBitmap":
@@ -547,12 +901,12 @@ class RoaringBitmap:
             i = other._find_key(k)
             if i < 0:
                 out.keys.append(k)
-                out.containers.append(c.clone())
+                out.containers.append(_canonical(c.clone()))
             else:
                 r = container_andnot(c, other.containers[i])
                 if r.cardinality > 0:
                     out.keys.append(k)
-                    out.containers.append(r)
+                    out.containers.append(_canonical(r))
         return out
 
     # -- in-place union (S4 in-place variants) ----------------------------------
@@ -564,7 +918,8 @@ class RoaringBitmap:
             k2 = other.keys[j]
             if i >= len(self.keys) or self.keys[i] > k2:
                 self.keys.insert(i, k2)
-                self.containers.insert(i, other.containers[j].clone())
+                self.containers.insert(
+                    i, _canonical(other.containers[j].clone()))
                 i += 1
                 j += 1
             elif self.keys[i] < k2:
@@ -572,9 +927,10 @@ class RoaringBitmap:
             else:
                 a, b = self.containers[i], other.containers[j]
                 if isinstance(a, BitmapContainer) and isinstance(b, BitmapContainer):
-                    self.containers[i] = union_bitmap_bitmap_inplace(a, b)
+                    self.containers[i] = _canonical(
+                        union_bitmap_bitmap_inplace(a, b))
                 else:
-                    self.containers[i] = container_or(a, b)
+                    self.containers[i] = _canonical(container_or(a, b))
                 i += 1
                 j += 1
         return self
@@ -607,15 +963,21 @@ class RoaringBitmap:
         n_arr = sum(1 for c in self.containers if isinstance(c, ArrayContainer))
         return n_arr, len(self.containers) - n_arr
 
+    def kind_stats(self) -> Tuple[int, int, int]:
+        """(n_array, n_bitmap, n_run) container counts."""
+        na = sum(1 for c in self.containers if isinstance(c, ArrayContainer))
+        nb = sum(1 for c in self.containers if isinstance(c, BitmapContainer))
+        return na, nb, len(self.containers) - na - nb
+
     def __eq__(self, other: object) -> bool:
         if not isinstance(other, RoaringBitmap):
             return NotImplemented
         return np.array_equal(self.to_array(), other.to_array())
 
     def __repr__(self) -> str:
-        na, nb = self.container_stats()
+        na, nb, nr = self.kind_stats()
         return (f"RoaringBitmap(card={self.cardinality}, containers={na} array"
-                f" + {nb} bitmap)")
+                f" + {nb} bitmap + {nr} run)")
 
 
 # =============================================================================
@@ -641,10 +1003,11 @@ def union_many(bitmaps: Sequence[RoaringBitmap]) -> RoaringBitmap:
         a = group[0].clone()
         if len(group) == 1:
             out.keys.append(key)
-            out.containers.append(a)
+            out.containers.append(_canonical(a))
             continue
-        if isinstance(a, ArrayContainer):
-            # array mode: Alg. 4 line 13 — merge until it upgrades to bitmap
+        if not isinstance(a, BitmapContainer):
+            # array/run mode: Alg. 4 line 13 — pair-merge (run-merge for run
+            # operands) until the accumulator upgrades to bitmap
             for qi, q in enumerate(group[1:]):
                 a = container_or(a, q)
                 if isinstance(a, BitmapContainer):
@@ -654,9 +1017,8 @@ def union_many(bitmaps: Sequence[RoaringBitmap]) -> RoaringBitmap:
             # re-ORing containers already merged during array mode is a no-op
             # (idempotent), so we simply sweep the whole group.
             for q in group[1:]:
-                wq = q.words if isinstance(q, BitmapContainer) else array_to_bitmap(q.arr)
-                np.bitwise_or(a.words, wq, out=a.words)
+                np.bitwise_or(a.words, _words_of(q), out=a.words)
             a.cardinality = popcount_words(a.words)  # line 14: once at the end
         out.keys.append(key)
-        out.containers.append(a)
+        out.containers.append(_canonical(a))
     return out

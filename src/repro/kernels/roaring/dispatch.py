@@ -1,0 +1,304 @@
+"""The kind-dispatch engine: one declarative registry of per-pair-class row
+kernels, consumed by all three backends.
+
+PR 1 hard-coded the paper's 3-kind hybrid dispatch as ``(kind_a, kind_b)``
+branch chains in three places (``jax_roaring`` slab ops, the XLA reference,
+the ``@pl.when`` Pallas kernel). Adding the 2016 follow-up paper's run
+containers would have meant growing three hand-enumerated 3x3 grids to 4x4.
+Instead the grid now lives *here once*:
+
+  * ``AND_TABLE`` — one ``PairClass`` row per live ``(kind_a, kind_b)`` pair,
+    naming the row kernel, the output semantic the slab layer must apply, and
+    whether the kernel sees the operands swapped;
+  * ``make_and_kernels(coverage)`` — the row-kernel implementations, written
+    against gather-only jnp so the *same functions* run inside the Pallas
+    kernel body (``@pl.when``-selected) and vmapped in the XLA reference
+    (mask-selected). The only backend-specific piece is how a run row is
+    lifted to its coverage bitmap: the XLA side scatters (cheap,
+    O(n_runs + 4096)), the Pallas side binary-searches the run list per bit
+    position (gather-only); both produce bit-identical coverage;
+  * union / andnot routing policy (``union_route`` / ``andnot_route``) so the
+    slab layer's OR/XOR/ANDNOT pipelines classify from the same table.
+
+Row kernels all share one signature ``fn(x, y, cx, cy, rx, ry)`` over
+``(32, 128)`` u16 tiles (one 8 kB container row), returning
+``(hits_tile, card)``. ``swap`` in a table row means the kernel receives
+``(b, a)`` — e.g. ``bitmap x array`` reuses the ``array x bitmap`` probe with
+the roles reversed, and the slab layer compacts the hit mask against the
+``b`` side (``out == 'mask_b'``).
+
+Output semantics (``PairClass.out``):
+  * ``'bits'``   — ``hits`` is a bitmap-domain row (word-op result);
+  * ``'mask_a'`` — ``hits`` is a 0/1 mask over ``a``'s packed array slots;
+  * ``'mask_b'`` — same, over ``b``'s slots.
+
+``run x run`` is special-cased by the slab layer: the registry routes it to
+the *run-merge* row kernel (``slab_route == 'run_merge'``), a scatter/argsort
+formulation that stays entirely in run domain (``jax_roaring._run_merge_row``)
+— the in-kernel ``run_cov_and`` (coverage AND + fused popcount) is the
+Pallas/ref formulation of the same class, kept bit-identical for the
+tri-backend tests and for TPU contexts where the kernel output is consumed
+directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ROW_WORDS = 4096
+ROW_SHAPE = (32, 128)          # u16[32,128] == one 8 kB container row
+MAX_RUNS = ROW_WORDS // 2      # (start, length-1) u16 pairs per row
+
+KIND_EMPTY = 0
+KIND_ARRAY = 1
+KIND_BITMAP = 2
+KIND_RUN = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class PairClass:
+    """One cell of the dispatch grid."""
+
+    name: str
+    kind_a: int
+    kind_b: int
+    kernel: str                # row-kernel id in make_and_kernels()
+    out: str                   # 'bits' | 'mask_a' | 'mask_b'
+    swap: bool = False         # kernel receives (b, a) instead of (a, b)
+    slab_route: str = ""       # non-default slab-layer routing ('run_merge')
+
+
+AND_TABLE: Tuple[PairClass, ...] = (
+    PairClass("array_array", KIND_ARRAY, KIND_ARRAY, "gallop", "mask_a"),
+    PairClass("array_bitmap", KIND_ARRAY, KIND_BITMAP, "probe", "mask_a"),
+    PairClass("bitmap_array", KIND_BITMAP, KIND_ARRAY, "probe", "mask_b",
+              swap=True),
+    PairClass("bitmap_bitmap", KIND_BITMAP, KIND_BITMAP, "word_and", "bits"),
+    PairClass("run_run", KIND_RUN, KIND_RUN, "run_cov_and", "bits",
+              slab_route="run_merge"),
+    PairClass("array_run", KIND_ARRAY, KIND_RUN, "run_gallop", "mask_a"),
+    PairClass("run_array", KIND_RUN, KIND_ARRAY, "run_gallop", "mask_b",
+              swap=True),
+    PairClass("run_bitmap", KIND_RUN, KIND_BITMAP, "run_mask", "bits"),
+    PairClass("bitmap_run", KIND_BITMAP, KIND_RUN, "run_mask", "bits",
+              swap=True),
+)
+
+
+def class_predicate(cls: PairClass, ka, kb):
+    """Row-selection predicate for one grid cell (jnp, scalar or batched)."""
+    return jnp.logical_and(ka == cls.kind_a, kb == cls.kind_b)
+
+
+def out_mask(out: str, ka, kb):
+    """Batched predicate: rows whose AND output has the given semantic,
+    honoring the slab-layer override for run x run."""
+    acc = jnp.zeros_like(ka, dtype=bool)
+    for cls in AND_TABLE:
+        if cls.out == out and not cls.slab_route:
+            acc = acc | class_predicate(cls, ka, kb)
+    return acc
+
+
+def route_mask(route: str, ka, kb):
+    """Batched predicate: rows the slab layer routes specially."""
+    acc = jnp.zeros_like(ka, dtype=bool)
+    for cls in AND_TABLE:
+        if cls.slab_route == route:
+            acc = acc | class_predicate(cls, ka, kb)
+    return acc
+
+
+def union_route(ka, kb, ca, cb, array_max: int):
+    """OR/XOR routing policy: packed sorted-merge only for array-ish pairs
+    whose merged size provably stays under the threshold; every other live
+    pair goes through the (kind-aware, run-lift-cheap) bitmap domain."""
+    arrayish = (ka != KIND_BITMAP) & (ka != KIND_RUN) & \
+               (kb != KIND_BITMAP) & (kb != KIND_RUN)
+    small = arrayish & (ca + cb <= array_max)
+    live = (ka != KIND_EMPTY) | (kb != KIND_EMPTY)
+    return small, live & ~small
+
+
+def andnot_route(ka, kb):
+    """ANDNOT routing: array-A rows probe B in place (any B kind — the result
+    is provably <= card_a); bitmap- or run-A rows go bitmap domain."""
+    probe = ka == KIND_ARRAY
+    lift = (ka == KIND_BITMAP) | (ka == KIND_RUN)
+    return probe, lift
+
+
+# =============================================================================
+# shared row kernels (gather-only jnp: Pallas-body and vmap compatible)
+# =============================================================================
+
+def _flat_pos():
+    return (jax.lax.broadcasted_iota(jnp.int32, ROW_SHAPE, 0) * ROW_SHAPE[1]
+            + jax.lax.broadcasted_iota(jnp.int32, ROW_SHAPE, 1))
+
+
+def _take_flat(row, idx):
+    """Gather from a (32,128) tile by flat element index."""
+    return jnp.take(row.reshape(ROW_WORDS), idx)
+
+
+def _run_upper_bound(run_row, n_runs, p):
+    """#run-starts <= p, searching the packed (start, len-1) pairs at even
+    slots. 12 halvings resolve a window of up to 2048 runs."""
+    lo = jnp.zeros_like(p)
+    hi = jnp.full_like(p, n_runs)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        open_ = lo < hi                      # empty windows must not probe
+        mid = (lo + hi) // 2
+        s = _take_flat(run_row, jnp.clip(2 * mid, 0, ROW_WORDS - 2)).astype(
+            jnp.int32)
+        go_right = open_ & (s <= p)
+        return (jnp.where(go_right, mid + 1, lo),
+                jnp.where(open_ & ~go_right, mid, hi))
+
+    lo, _ = jax.lax.fori_loop(0, 12, body, (lo, hi))
+    return lo
+
+
+def _run_covered(run_row, n_runs, p):
+    """Is position ``p`` inside one of the row's runs? (binary search of the
+    run list — the gallop-in-ranges probe.)"""
+    idx = _run_upper_bound(run_row, n_runs, p) - 1
+    idx_c = jnp.clip(idx, 0, MAX_RUNS - 1)
+    s = _take_flat(run_row, 2 * idx_c).astype(jnp.int32)
+    l = _take_flat(run_row, 2 * idx_c + 1).astype(jnp.int32)
+    return (idx >= 0) & (p <= s + l)
+
+
+def coverage_by_search(run_row, n_runs):
+    """Run row -> coverage bitmap tile, gather-only (the Pallas-side lift):
+    each of the 2^16 bit positions asks ``_run_covered`` via 16 lane-parallel
+    passes over the (32,128) word tile."""
+    word = _flat_pos()
+
+    def bit_body(j, cov):
+        covered = _run_covered(run_row, n_runs, word * 16 + j)
+        return cov | (covered.astype(jnp.uint16) << j)
+
+    return jax.lax.fori_loop(0, 16, bit_body,
+                             jnp.zeros(ROW_SHAPE, jnp.uint16))
+
+
+def coverage_by_scatter(run_row, n_runs):
+    """Run row -> coverage bitmap tile via difference-array scatter,
+    O(n_runs + ROW_WORDS) (the XLA-side lift). Bit-identical to
+    ``coverage_by_search``; not Pallas-lowerable (scatter)."""
+    flat = run_row.reshape(ROW_WORDS)
+    pairs = flat.reshape(MAX_RUNS, 2).astype(jnp.int32)
+    s, l = pairs[:, 0], pairs[:, 1]
+    valid = (s + l) < (1 << 16)                  # 0xFFFF padding fails this
+    e = s + l
+    fw, lw = s >> 4, e >> 4
+    mask_a = ((0xFFFF << (s & 15)) & 0xFFFF)
+    mask_b = (0xFFFF >> (15 - (e & 15)))
+    same = fw == lw
+    m_first = jnp.where(same, mask_a & mask_b, mask_a)
+    partial = jnp.zeros((ROW_WORDS,), jnp.int32)
+    partial = partial.at[jnp.where(valid, fw, ROW_WORDS)].add(
+        m_first, mode="drop")
+    partial = partial.at[jnp.where(valid & ~same, lw, ROW_WORDS)].add(
+        mask_b, mode="drop")
+    span = valid & (lw > fw)
+    diff = jnp.zeros((ROW_WORDS + 1,), jnp.int32)
+    diff = diff.at[jnp.where(span, fw + 1, ROW_WORDS + 1)].add(1, mode="drop")
+    diff = diff.at[jnp.where(span, lw, ROW_WORDS + 1)].add(-1, mode="drop")
+    full = jnp.where(jnp.cumsum(diff)[:ROW_WORDS] > 0, 0xFFFF, 0)
+    return (partial | full).astype(jnp.uint16).reshape(ROW_SHAPE)
+
+
+def make_and_kernels(coverage: Callable) -> Dict[str, Callable]:
+    """Bind the AND row kernels to a run-coverage lift implementation.
+
+    Every kernel: ``fn(x, y, cx, cy, rx, ry) -> (hits u16[32,128], card)``
+    where ``x``/``y`` are the (possibly swapped — see ``PairClass.swap``)
+    container-row tiles and ``cx/cy/rx/ry`` their cardinalities / run counts.
+    """
+
+    def k_gallop(x, y, cx, cy, rx, ry):
+        # vectorized galloping: every lane of x binary-searches y's packed
+        # sorted prefix. 13 steps: lower_bound over a window of up to 4096
+        # needs ceil(log2(4096)) + 1 halvings.
+        a = x.astype(jnp.int32)
+        lo = jnp.zeros(ROW_SHAPE, jnp.int32)
+        hi = jnp.full(ROW_SHAPE, cy, jnp.int32)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = (lo + hi) // 2
+            vals = _take_flat(y, jnp.clip(mid, 0, ROW_WORDS - 1)).astype(
+                jnp.int32)
+            go_right = vals < a
+            return (jnp.where(go_right, mid + 1, lo),
+                    jnp.where(go_right, hi, mid))
+
+        lo, _ = jax.lax.fori_loop(0, 13, body, (lo, hi))
+        found = _take_flat(y, jnp.clip(lo, 0, ROW_WORDS - 1)).astype(
+            jnp.int32) == a
+        found = found & (lo < cy) & (_flat_pos() < cx)
+        return found.astype(jnp.uint16), jnp.sum(found.astype(jnp.int32))
+
+    def k_probe(x, y, cx, cy, rx, ry):
+        # bit probes: x's <=4096 packed values index y's bitmap words
+        # directly — the 2^16-bit domain is never materialized
+        arr = x.astype(jnp.int32)
+        word = _take_flat(y, arr >> 4).astype(jnp.int32)
+        hit = (((word >> (arr & 15)) & 1) == 1) & (_flat_pos() < cx)
+        return hit.astype(jnp.uint16), jnp.sum(hit.astype(jnp.int32))
+
+    def k_word_and(x, y, cx, cy, rx, ry):
+        # Algorithm 3: word AND with the popcount fused into the same pass
+        res = jnp.bitwise_and(x, y)
+        return res, jnp.sum(jax.lax.population_count(res).astype(jnp.int32))
+
+    def k_run_gallop(x, y, cx, cy, rx, ry):
+        # gallop-in-ranges: x's packed values binary-search y's run list
+        hit = _run_covered(y, ry, x.astype(jnp.int32)) & (_flat_pos() < cx)
+        return hit.astype(jnp.uint16), jnp.sum(hit.astype(jnp.int32))
+
+    def k_run_mask(x, y, cx, cy, rx, ry):
+        # range-mask: lift x's runs to coverage words, AND with y's bitmap
+        res = jnp.bitwise_and(coverage(x, rx), y)
+        return res, jnp.sum(jax.lax.population_count(res).astype(jnp.int32))
+
+    def k_run_cov_and(x, y, cx, cy, rx, ry):
+        res = jnp.bitwise_and(coverage(x, rx), coverage(y, ry))
+        return res, jnp.sum(jax.lax.population_count(res).astype(jnp.int32))
+
+    return {
+        "gallop": k_gallop,
+        "probe": k_probe,
+        "word_and": k_word_and,
+        "run_gallop": k_run_gallop,
+        "run_mask": k_run_mask,
+        "run_cov_and": k_run_cov_and,
+    }
+
+
+def bind_args(cls: PairClass, da, db, ca, cb, ra, rb):
+    """Operand roles for one grid cell (apply ``swap``)."""
+    if cls.swap:
+        return db, da, cb, ca, rb, ra
+    return da, db, ca, cb, ra, rb
+
+
+META_FIELDS = 6  # (kind_a, kind_b, card_a, card_b, nruns_a, nruns_b)
+
+
+def unpack_meta(meta, i=None):
+    """Interleaved i32[6C] meta -> per-row fields (scalar at ``i`` or
+    batched slices)."""
+    if i is None:
+        return tuple(meta[j::META_FIELDS] for j in range(META_FIELDS))
+    return tuple(meta[META_FIELDS * i + j] for j in range(META_FIELDS))

@@ -16,14 +16,18 @@ Three kernels:
    window of up to 4096 elements), so comparison count per lane matches
    galloping's log bound while the VPU amortizes it across 4096 lanes.
 
-3. ``intersect_dispatch``: the paper's hybrid per-type dispatch (S4), fused.
-   One grid step reads the ``(kind_a, kind_b)`` tag pair from scalar prefetch
-   and ``@pl.when``-branches into exactly one of: the vectorized galloping
-   search (array x array), batched bit probes of the array's values against
-   the other side's bitmap words (array x bitmap — no domain lift), or the
-   word-AND + fused popcount (bitmap x bitmap). Work is *skipped*, not
-   masked: a sparse pair never touches the 2^16-bit domain. This is the
-   kernel behind ``jax_roaring.slab_and``; the XLA mirror lives in
+3. ``intersect_dispatch``: the hybrid per-type dispatch (paper S4, extended
+   to the 2016 follow-up's run containers), fused. The kernel body is
+   *generated from the declarative registry* (``dispatch.AND_TABLE``): one
+   grid step reads the ``(kind, card, n_runs)`` tags from scalar prefetch and
+   ``@pl.when``-branches into exactly one registry row kernel — vectorized
+   galloping (array x array), bit probes (array x bitmap), word-AND + fused
+   popcount (bitmap x bitmap), gallop-in-ranges (array x run), and the
+   range-mask coverage forms (run x bitmap, run x run) whose run lift is the
+   gather-only binary search (``dispatch.coverage_by_search``; Pallas cannot
+   scatter). Work is *skipped*, not masked: a sparse pair never touches the
+   2^16-bit domain. This is the kernel behind ``jax_roaring.slab_and``; the
+   XLA mirror (same table, scatter-based run lift) lives in
    ``ref.intersect_dispatch_ref``.
 
 Block shapes: container rows are (32, 128) u16 tiles = 8 kB — one row per
@@ -40,11 +44,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import dispatch as D
+
 ROW_WORDS = 4096
 ROW_SHAPE = (32, 128)          # u16[32,128] == one 8 kB container row
-KIND_EMPTY = 0
-KIND_ARRAY = 1
-KIND_BITMAP = 2
+KIND_EMPTY = D.KIND_EMPTY
+KIND_ARRAY = D.KIND_ARRAY
+KIND_BITMAP = D.KIND_BITMAP
+KIND_RUN = D.KIND_RUN
 
 _OPS = {
     "and": jnp.bitwise_and,
@@ -174,76 +181,38 @@ def array_intersect_pallas(a_arr: jax.Array, b_arr: jax.Array,
     return hits.reshape(C, ROW_WORDS), count
 
 
-def _flat_pos():
-    return (jax.lax.broadcasted_iota(jnp.int32, ROW_SHAPE, 0) * 128
-            + jax.lax.broadcasted_iota(jnp.int32, ROW_SHAPE, 1))
+_PL_KERNELS = D.make_and_kernels(D.coverage_by_search)
 
 
 def _intersect_dispatch_kernel(meta_ref, a_ref, b_ref, hits_ref, card_ref):
-    """Hybrid per-type dispatch (paper S4): one container pair per grid step,
-    ``@pl.when`` selects exactly one of the three intersection algorithms.
+    """Hybrid per-kind dispatch, generated from ``dispatch.AND_TABLE``: one
+    container pair per grid step, ``@pl.when`` selects exactly one registry
+    row kernel by the pair's ``(kind_a, kind_b)`` cell.
 
-    ``meta`` is i32[4C] interleaved (kind_a, kind_b, card_a, card_b). Output
-    per row: for pairs with an array side, ``hits`` is a 0/1 mask over the
-    array side's 4096 slots (A's slots unless A is the bitmap); for
-    bitmap x bitmap it is the AND'd bitmap words. ``card`` is exact either
-    way (fused popcount for the bitmap case).
+    ``meta`` is i32[6C] interleaved (kind_a, kind_b, card_a, card_b,
+    nruns_a, nruns_b). Output per row follows the cell's ``out`` semantic:
+    a 0/1 mask over the array side's 4096 slots (``mask_a``/``mask_b``), or
+    the word-op bitmap words (``bits`` — bitmap x bitmap and the
+    coverage-lifted run forms). ``card`` is exact either way (fused popcount
+    for the bits cases).
     """
     i = pl.program_id(0)
-    ka = meta_ref[4 * i]
-    kb = meta_ref[4 * i + 1]
-    ca = meta_ref[4 * i + 2]
-    cb = meta_ref[4 * i + 3]
-    live = jnp.logical_and(ka != KIND_EMPTY, kb != KIND_EMPTY)
-    aa = live & (ka == KIND_ARRAY) & (kb == KIND_ARRAY)
-    ab = live & (ka == KIND_ARRAY) & (kb == KIND_BITMAP)
-    ba = live & (ka == KIND_BITMAP) & (kb == KIND_ARRAY)
-    bb = live & (ka == KIND_BITMAP) & (kb == KIND_BITMAP)
+    ka, kb, ca, cb, ra, rb = D.unpack_meta(meta_ref, i)
+    matched = jnp.zeros((), jnp.bool_)
 
-    @pl.when(bb)
-    def _bitmap_bitmap():
-        # Algorithm 3: word AND with the popcount fused into the same pass
-        res = jnp.bitwise_and(a_ref[0], b_ref[0])
-        hits_ref[0] = res
-        card_ref[0] = jnp.sum(jax.lax.population_count(res).astype(jnp.int32))
+    for cls in D.AND_TABLE:
+        pred = D.class_predicate(cls, ka, kb)
+        matched = jnp.logical_or(matched, pred)
 
-    @pl.when(aa)
-    def _array_array():
-        # vectorized galloping: every lane of A binary-searches B. 13 steps:
-        # lower_bound over a window of up to 4096 needs ceil(log2(4096)) + 1
-        # halvings to reach size 0 (12 leaves a size-1 window unresolved).
-        a = a_ref[0].astype(jnp.int32)
-        b = b_ref[0].reshape(ROW_WORDS).astype(jnp.int32)
-        lo = jnp.zeros(ROW_SHAPE, jnp.int32)
-        hi = jnp.full(ROW_SHAPE, cb, jnp.int32)
+        @pl.when(pred)
+        def _cell(cls=cls):
+            x, y, cx, cy, rx, ry = D.bind_args(cls, a_ref[0], b_ref[0],
+                                               ca, cb, ra, rb)
+            hits, card = _PL_KERNELS[cls.kernel](x, y, cx, cy, rx, ry)
+            hits_ref[0] = hits
+            card_ref[0] = card
 
-        def body(_, lohi):
-            lo, hi = lohi
-            mid = (lo + hi) // 2
-            vals = jnp.take(b, jnp.clip(mid, 0, ROW_WORDS - 1))
-            go_right = vals < a
-            return (jnp.where(go_right, mid + 1, lo),
-                    jnp.where(go_right, hi, mid))
-
-        lo, hi = jax.lax.fori_loop(0, 13, body, (lo, hi))
-        found = jnp.take(b, jnp.clip(lo, 0, ROW_WORDS - 1)) == a
-        found = found & (lo < cb) & (_flat_pos() < ca)
-        hits_ref[0] = found.astype(jnp.uint16)
-        card_ref[0] = jnp.sum(found.astype(jnp.int32))
-
-    @pl.when(jnp.logical_or(ab, ba))
-    def _array_bitmap():
-        # bit probes: the array side's <=4096 values index the bitmap side's
-        # words directly — the 2^16-bit domain is never materialized
-        arr = jnp.where(ab, a_ref[0], b_ref[0]).astype(jnp.int32)
-        bits = jnp.where(ab, b_ref[0], a_ref[0]).reshape(ROW_WORDS)
-        word = jnp.take(bits, arr >> 4).astype(jnp.int32)
-        hit = ((word >> (arr & 15)) & 1) == 1
-        hit = hit & (_flat_pos() < jnp.where(ab, ca, cb))
-        hits_ref[0] = hit.astype(jnp.uint16)
-        card_ref[0] = jnp.sum(hit.astype(jnp.int32))
-
-    @pl.when(jnp.logical_not(live))
+    @pl.when(jnp.logical_not(matched))
     def _dead():
         hits_ref[0] = jnp.zeros(ROW_SHAPE, jnp.uint16)
         card_ref[0] = 0
@@ -253,11 +222,11 @@ def intersect_dispatch_pallas(a_data: jax.Array, b_data: jax.Array,
                               meta: jax.Array, interpret: bool = True):
     """Fused hybrid intersection over key-aligned container rows.
 
-    a_data, b_data: u16[C, 4096] raw container rows (packed arrays or bitmap
-    words, per their kind tag — *not* lifted to bitmap domain).
-    meta: i32[4C] interleaved (kind_a, kind_b, card_a, card_b) per row.
-    Returns (hits u16[C, 4096], card i32[C]); see the kernel docstring for
-    the per-pair-type meaning of ``hits``.
+    a_data, b_data: u16[C, 4096] raw container rows (packed arrays, bitmap
+    words, or run pairs, per their kind tag — *not* lifted to bitmap domain).
+    meta: i32[6C] interleaved (kind_a, kind_b, card_a, card_b, nruns_a,
+    nruns_b) per row. Returns (hits u16[C, 4096], card i32[C]); see the
+    kernel docstring for the per-pair-class meaning of ``hits``.
     """
     C = a_data.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(

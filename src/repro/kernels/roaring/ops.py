@@ -48,12 +48,14 @@ def array_intersect(a_arr, b_arr, cards,
 def intersect_dispatch(a_data, b_data, meta,
                        use_pallas: bool | None = None,
                        interpret: bool = False):
-    """Hybrid per-kind container intersection over key-aligned rows.
+    """Kind-dispatch container intersection over key-aligned rows, routed
+    by the declarative registry (``dispatch.AND_TABLE`` — the 4x4 grid
+    including run containers).
 
-    meta: i32[4C] interleaved (kind_a, kind_b, card_a, card_b). Returns
-    (hits u16[C, 4096], card i32[C]) — the slab layer compacts / lazily
-    canonicalizes on top of this. Pallas (``@pl.when`` skip) on TPU, XLA
-    reference elsewhere.
+    meta: i32[6C] interleaved (kind_a, kind_b, card_a, card_b, nruns_a,
+    nruns_b). Returns (hits u16[C, 4096], card i32[C]) — the slab layer
+    compacts / lazily canonicalizes best-of-three on top of this. Pallas
+    (``@pl.when`` skip) on TPU, XLA reference elsewhere.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()

@@ -1,11 +1,28 @@
-"""Pure-jnp oracles for the roaring container kernels."""
+"""Pure-jnp oracles for the roaring container kernels.
+
+``intersect_dispatch_ref`` consumes the same declarative pair-class registry
+(``dispatch.AND_TABLE``) as the Pallas kernel: one cond-guarded vmapped pass
+per grid cell, selected by the cell's ``(kind_a, kind_b)`` predicate. XLA has
+no per-row skip, so within a pass every row computes masked — but a class
+with no matching rows is skipped wholesale at runtime by ``lax.cond``, and
+none of the cheap paths touches the 2^16-element domain. The run-coverage
+lift binds to the scatter formulation (O(n_runs + 4096) per row) instead of
+the kernel's gather-only search; both are bit-identical.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-ROW_WORDS = 4096
+from . import dispatch as D
+
+ROW_WORDS = D.ROW_WORDS
+ROW_SHAPE = D.ROW_SHAPE
+KIND_EMPTY = D.KIND_EMPTY
+KIND_ARRAY = D.KIND_ARRAY
+KIND_BITMAP = D.KIND_BITMAP
+KIND_RUN = D.KIND_RUN
 
 _OPS = {
     "and": jnp.bitwise_and,
@@ -40,7 +57,7 @@ def array_intersect_ref(a_arr: jax.Array, b_arr: jax.Array, cards: jax.Array):
     return jax.vmap(one)(a_arr, b_arr, card_a, card_b)
 
 
-KIND_EMPTY, KIND_ARRAY, KIND_BITMAP = 0, 1, 2
+_KERNELS = D.make_and_kernels(D.coverage_by_scatter)
 
 
 def intersect_dispatch_ref(a_data: jax.Array, b_data: jax.Array,
@@ -48,49 +65,33 @@ def intersect_dispatch_ref(a_data: jax.Array, b_data: jax.Array,
     """XLA mirror of the fused hybrid dispatch kernel.
 
     Same contract as ``kernel.intersect_dispatch_pallas``: per row, ``hits``
-    is a 0/1 mask over the array side's slots (array x array and
-    array x bitmap pairs) or the AND'd bitmap words (bitmap x bitmap);
-    ``card`` is the exact intersection cardinality. All three algorithms are
-    computed masked (XLA has no per-row skip) — the skip economics live in
-    the Pallas path; this formulation is still cheap because nothing here
-    touches the 2^16-element domain.
+    is a 0/1 mask over the array side's slots (``out == 'mask_*'`` classes),
+    or the word-op result (``'bits'`` classes: bitmap x bitmap AND, and the
+    coverage-lifted run x bitmap / run x run forms); ``card`` is the exact
+    intersection cardinality either way. ``meta`` is i32[6C] interleaved
+    (kind_a, kind_b, card_a, card_b, nruns_a, nruns_b).
     """
-    ka, kb = meta[0::4], meta[1::4]
-    ca, cb = meta[2::4], meta[3::4]
+    ka, kb, ca, cb, ra, rb = D.unpack_meta(meta)
+    C = a_data.shape[0]
+    a3 = a_data.reshape(C, *ROW_SHAPE)
+    b3 = b_data.reshape(C, *ROW_SHAPE)
 
-    def one(da, db, ka, kb, ca, cb):
-        live = (ka != KIND_EMPTY) & (kb != KIND_EMPTY)
-        aa = live & (ka == KIND_ARRAY) & (kb == KIND_ARRAY)
-        ab = live & (ka == KIND_ARRAY) & (kb == KIND_BITMAP)
-        ba = live & (ka == KIND_BITMAP) & (kb == KIND_ARRAY)
-        bb = live & (ka == KIND_BITMAP) & (kb == KIND_BITMAP)
-        slot = jnp.arange(ROW_WORDS, dtype=jnp.int32)
+    hits = jnp.zeros((C, *ROW_SHAPE), jnp.uint16)
+    card = jnp.zeros((C,), jnp.int32)
+    for cls in D.AND_TABLE:
+        pred = D.class_predicate(cls, ka, kb)
+        fn = _KERNELS[cls.kernel]
 
-        # array x array: vectorized galloping (searchsorted == binary search)
-        pos = jnp.searchsorted(db, da)
-        pos_c = jnp.clip(pos, 0, ROW_WORDS - 1)
-        aa_hit = (db[pos_c] == da) & (pos < cb) & (slot < ca)
+        def run_class(args, fn=fn, cls=cls, pred=pred):
+            hits, card = args
 
-        # array x bitmap: bit probes, no domain lift
-        arr = jnp.where(ab, da, db).astype(jnp.int32)
-        bits = jnp.where(ab, db, da)
-        word = bits[arr >> 4].astype(jnp.int32)
-        probe_hit = (((word >> (arr & 15)) & 1) == 1) & \
-            (slot < jnp.where(ab, ca, cb))
+            def one(da, db, ca_i, cb_i, ra_i, rb_i):
+                return fn(*D.bind_args(cls, da, db, ca_i, cb_i, ra_i, rb_i))
 
-        # bitmap x bitmap: word AND + popcount (Algorithm 3)
-        anded = jnp.bitwise_and(da, db)
+            h, c = jax.vmap(one)(a3, b3, ca, cb, ra, rb)
+            sel = pred[:, None, None]
+            return (jnp.where(sel, h, hits), jnp.where(pred, c, card))
 
-        hits = jnp.where(
-            bb, anded,
-            jnp.where(aa, aa_hit.astype(jnp.uint16),
-                      jnp.where(ab | ba, probe_hit.astype(jnp.uint16),
-                                jnp.uint16(0))))
-        card = jnp.where(
-            bb, jnp.sum(jax.lax.population_count(anded).astype(jnp.int32)),
-            jnp.where(aa, jnp.sum(aa_hit.astype(jnp.int32)),
-                      jnp.where(ab | ba, jnp.sum(probe_hit.astype(jnp.int32)),
-                                0)))
-        return hits, card
-
-    return jax.vmap(one)(a_data, b_data, ka, kb, ca, cb)
+        hits, card = jax.lax.cond(jnp.any(pred), run_class,
+                                  lambda args: args, (hits, card))
+    return hits.reshape(C, ROW_WORDS), card

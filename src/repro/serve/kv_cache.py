@@ -34,8 +34,10 @@ class RoaringPageTable:
     def __init__(self, n_pages: int, page_size: int):
         self.n_pages = n_pages
         self.page_size = page_size
-        self.free = RoaringBitmap.from_sorted_unique(
-            np.arange(n_pages, dtype=np.int64))
+        # the free pool starts as one maximal run [0, n_pages) — run
+        # containers (2016 paper), not a materialized page-id array; pop /
+        # release keep it best-of-three canonical
+        self.free = RoaringBitmap.from_ranges([(0, n_pages)])
         self.seq_pages: Dict[int, List[int]] = {}
         self.seq_len: Dict[int, int] = {}
 
@@ -79,16 +81,19 @@ class RoaringPageTable:
         return max(1, (self.n_pages + jr.CHUNK_SIZE - 1) // jr.CHUNK_SIZE)
 
     def free_slab(self):
-        """Free-page set as a device RoaringSlab (for jit-side allocators)."""
+        """Free-page set as a device RoaringSlab (for jit-side allocators).
+
+        Kind-preserving bridge: the free pool's run containers land as run
+        rows directly — no per-page materialization, no bitmap round trip.
+        """
         from repro.core import jax_roaring as jr
-        return jr.from_dense_array(self.free.to_array(),
-                                   self._page_capacity(), self.n_pages)
+        return jr.from_roaring(self.free, self._page_capacity())
 
     def used_slab(self):
-        """In-use pages as a device RoaringSlab (Alg. 4 union of per-seq sets)."""
+        """In-use pages as a device RoaringSlab (Alg. 4 union of per-seq
+        sets; contiguously-allocated sequences union into run rows)."""
         from repro.core import jax_roaring as jr
-        return jr.from_dense_array(self.used_bitmap().to_array(),
-                                   self._page_capacity(), self.n_pages)
+        return jr.from_roaring(self.used_bitmap(), self._page_capacity())
 
     def shared_pages(self, seq_a: int, seq_b: int) -> int:
         """# physical pages two sequences share (prefix-cache diagnostics) via

@@ -25,32 +25,34 @@ from repro.core import RoaringBitmap, union_many
 
 
 def causal_mask(num_blocks: int) -> List[RoaringBitmap]:
-    """Row r attends to blocks [0, r]."""
-    return [RoaringBitmap.from_sorted_unique(np.arange(r + 1))
-            for r in range(num_blocks)]
+    """Row r attends to blocks [0, r] — one run, built directly (2016
+    paper's run containers; no per-block materialization)."""
+    return [RoaringBitmap.from_range(0, r + 1) for r in range(num_blocks)]
 
 
 def local_window_mask(num_blocks: int, window_blocks: int,
                       causal: bool = True) -> List[RoaringBitmap]:
+    """Row r attends to its contiguous window — one run per row."""
     rows = []
     for r in range(num_blocks):
         lo = max(0, r - window_blocks + 1)
         hi = r + 1 if causal else min(num_blocks, r + window_blocks)
-        rows.append(RoaringBitmap.from_sorted_unique(np.arange(lo, hi)))
+        rows.append(RoaringBitmap.from_range(lo, hi))
     return rows
 
 
 def global_stripe_mask(num_blocks: int, stripe: Sequence[int],
                        causal: bool = True) -> List[RoaringBitmap]:
     """Every row attends to the given global block ids (and, symmetrically,
-    stripe rows attend everywhere — the BigBird-style global pattern)."""
+    stripe rows attend everywhere — the BigBird-style global pattern).
+    Stripe rows are runs; scattered rows stay array containers."""
     stripe_arr = np.asarray(sorted(set(stripe)), dtype=np.int64)
     rows = []
     for r in range(num_blocks):
         s = stripe_arr[stripe_arr <= r] if causal else stripe_arr
         if r in stripe:
-            full = np.arange(r + 1) if causal else np.arange(num_blocks)
-            rows.append(RoaringBitmap.from_sorted_unique(full))
+            rows.append(RoaringBitmap.from_range(
+                0, r + 1 if causal else num_blocks))
         else:
             rb = RoaringBitmap.from_sorted_unique(s)
             rb.add(r)                      # always see own block
@@ -61,7 +63,7 @@ def global_stripe_mask(num_blocks: int, stripe: Sequence[int],
 def doc_boundary_mask(num_blocks: int, doc_starts_blocks: Sequence[int],
                       causal: bool = True) -> List[RoaringBitmap]:
     """Attention confined within document segments (from the data pipeline's
-    bitmap index of document starts)."""
+    bitmap index of document starts) — one run per row."""
     starts = sorted(set([0] + list(doc_starts_blocks)))
     bounds = starts + [num_blocks]
     rows = []
@@ -69,7 +71,7 @@ def doc_boundary_mask(num_blocks: int, doc_starts_blocks: Sequence[int],
         seg = max(i for i, s in enumerate(starts) if s <= r)
         lo, hi = bounds[seg], bounds[seg + 1]
         hi_eff = r + 1 if causal else hi
-        rows.append(RoaringBitmap.from_sorted_unique(np.arange(lo, hi_eff)))
+        rows.append(RoaringBitmap.from_range(lo, hi_eff))
     return rows
 
 
@@ -133,14 +135,13 @@ def rows_to_slabs(rows: Sequence[RoaringBitmap], capacity: int = 2):
     """Stack mask rows into a batched RoaringSlab (leading axis = row).
 
     Block-id universes are small (< 2^16 for any practical block count), so
-    each row is one array or bitmap container; the stacked slab feeds the
-    vmapped dispatch surfaces below.
+    each row is one container; the kind-preserving bridge keeps window /
+    causal / doc rows as run rows (no per-block materialization), feeding
+    the run pair classes of the vmapped dispatch surfaces below.
     """
     from repro.core import jax_roaring as jr
 
-    max_n = max(1, max((len(r) for r in rows), default=1))
-    return jr.stack_slabs(
-        [jr.from_dense_array(r.to_array(), capacity, max_n) for r in rows])
+    return jr.stack_slabs([jr.from_roaring(r, capacity) for r in rows])
 
 
 def mask_overlap_cards(m1: "MaskBuilder", m2: "MaskBuilder",

@@ -15,8 +15,13 @@ import jax.numpy as jnp
 from _hypothesis_compat import given, settings, st
 from repro.core import RoaringBitmap
 from repro.core import jax_roaring as jr
+from repro.core import py_roaring as pr
 from repro.kernels.roaring import kernel as K
 from repro.kernels.roaring import ref as R
+
+_KIND_OF = {pr.ArrayContainer: jr.KIND_ARRAY,
+            pr.BitmapContainer: jr.KIND_BITMAP,
+            pr.RunContainer: jr.KIND_RUN}
 
 
 def _slab(values, capacity=32, max_elems=1 << 16):
@@ -50,17 +55,23 @@ def _check_canonical(slab, oracle):
     assert np.all(np.diff(keys) >= 0)
     assert np.all(keys[~live] == int(jr.KEY_SENTINEL))
     assert list(keys[live]) == list(oracle.keys)
-    # container kind follows the 4096 rule exactly (array <=4096 < bitmap)
+    # container kind follows the best-of-three runOptimize rule exactly:
+    # the slab's choice must equal the oracle's canonical container type
     for k, c in zip(oracle.keys, oracle.containers):
         row = int(np.searchsorted(keys, k))
         assert cards[row] == c.cardinality
-        want_kind = (jr.KIND_BITMAP if c.cardinality > jr.ARRAY_MAX
-                     else jr.KIND_ARRAY)
-        assert kinds[row] == want_kind
-        # packed array prefix is bit-identical to the oracle's packed array
+        want_kind = _KIND_OF[type(c)]
+        assert kinds[row] == want_kind, (k, int(kinds[row]), want_kind)
+        # packed payloads are bit-identical to the oracle's
         if want_kind == jr.KIND_ARRAY:
             np.testing.assert_array_equal(
                 np.asarray(slab.data[row][: c.cardinality]), c.to_array())
+        elif want_kind == jr.KIND_RUN:
+            d = np.asarray(slab.data[row]).reshape(-1, 2)
+            np.testing.assert_array_equal(d[: c.n_runs, 0],
+                                          c.starts.astype(np.uint16))
+            np.testing.assert_array_equal(d[: c.n_runs, 1],
+                                          c.lengths.astype(np.uint16))
 
 
 # ------------------------------------------------------------ pair classes
@@ -105,12 +116,24 @@ def test_threshold_straddling(ca, cb):
 
 def test_or_output_crosses_threshold_down():
     """Two >4096 bitmaps whose AND lands back under 4096 must down-convert
-    (lazy canonicalization actually fires)."""
+    (lazy canonicalization actually fires). The result here is a single
+    contiguous stretch plus one point, so best-of-three picks run."""
     a = np.arange(4097)
     b = np.concatenate([np.arange(100), 4096 + np.arange(3997)])
     sa, sb = _slab(a, 4), _slab(b, 4)
     out = jr.slab_and(sa, sb)
     assert int(out.cardinality) == 101
+    assert int(out.kind[0]) == jr.KIND_RUN
+    _check_canonical(out, _oracle(a) & _oracle(b))
+
+def test_and_output_lands_as_scattered_array():
+    """A scattered sub-4096 bitmap x bitmap AND (no run structure) still
+    down-converts to a packed array, not a run row."""
+    rng = np.random.default_rng(0)
+    a = np.unique(rng.integers(0, 1 << 16, 9000))
+    b = np.unique(rng.integers(0, 1 << 16, 9000))
+    sa, sb = _slab(a, 4), _slab(b, 4)
+    out = jr.slab_and(sa, sb)
     assert int(out.kind[0]) == jr.KIND_ARRAY
     _check_canonical(out, _oracle(a) & _oracle(b))
 

@@ -1,0 +1,372 @@
+"""Run containers (2016 follow-up paper) across every layer.
+
+Covers the satellite checklist: the single-run-covering-2^16 extreme,
+run <-> array <-> bitmap threshold flips under add/remove, all 7 new pair
+classes bit-identical across py_roaring / XLA ref / Pallas-interpret, the
+4095/4096/4097 boundary with runs, rank/select round trips, the
+best-of-three size accounting, and the run-shaped consumers (KV page pool,
+window/causal/doc masks) actually producing run rows.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RoaringBitmap, RunContainer, union_many
+from repro.core import jax_roaring as jr
+from repro.core import py_roaring as pr
+from repro.kernels.roaring import dispatch as D
+from repro.kernels.roaring import kernel as K
+from repro.kernels.roaring import ref as R
+
+_KIND_OF = {pr.ArrayContainer: jr.KIND_ARRAY,
+            pr.BitmapContainer: jr.KIND_BITMAP,
+            pr.RunContainer: jr.KIND_RUN}
+
+
+def _values(slab, max_out=1 << 17):
+    idx, valid = jr.to_indices(slab, max_out)
+    return np.asarray(idx)[np.asarray(valid)]
+
+
+def _rand_set(n, universe, seed):
+    r = np.random.default_rng(seed)
+    return np.unique(r.integers(0, universe, size=n))
+
+
+def _rand_ranges(seed, n_ranges, universe, max_len=500):
+    r = np.random.default_rng(seed)
+    starts = np.sort(r.integers(0, universe, n_ranges))
+    lens = r.integers(1, max_len, n_ranges)
+    return [(int(s), int(min(s + l, universe)))
+            for s, l in zip(starts, lens)]
+
+
+def _check_canonical(slab, oracle, tag=""):
+    """Slab output must match the oracle on values, card, kind, and payload
+    bits (the best-of-three canonical discipline)."""
+    np.testing.assert_array_equal(_values(slab), oracle.to_array(),
+                                  err_msg=tag)
+    assert int(slab.cardinality) == len(oracle), tag
+    keys = np.asarray(slab.keys)
+    kinds = np.asarray(slab.kind)
+    cards = np.asarray(slab.card)
+    assert list(keys[kinds != jr.KIND_EMPTY]) == list(oracle.keys), tag
+    for k, c in zip(oracle.keys, oracle.containers):
+        row = int(np.searchsorted(keys, k))
+        assert cards[row] == c.cardinality, (tag, k)
+        assert kinds[row] == _KIND_OF[type(c)], (tag, k, int(kinds[row]))
+        if isinstance(c, pr.RunContainer):
+            d = np.asarray(slab.data[row]).reshape(-1, 2)
+            np.testing.assert_array_equal(d[: c.n_runs, 0],
+                                          c.starts.astype(np.uint16))
+            np.testing.assert_array_equal(d[: c.n_runs, 1],
+                                          c.lengths.astype(np.uint16))
+        elif isinstance(c, pr.ArrayContainer):
+            np.testing.assert_array_equal(
+                np.asarray(slab.data[row])[: c.cardinality], c.to_array())
+
+
+# ----------------------------------------------------------------- oracle
+def test_single_run_covering_full_chunk():
+    rb = RoaringBitmap.from_range(0, 1 << 16)
+    c = rb.containers[0]
+    assert isinstance(c, RunContainer)
+    assert c.n_runs == 1 and int(c.lengths[0]) == 0xFFFF
+    assert rb.cardinality == 1 << 16
+    assert rb.size_in_bytes() == 8 + 4 + 4          # header + 1 run
+    assert rb.contains(0) and rb.contains(65535) and not rb.contains(65536)
+    # slab mirror: the (0, 0xFFFF) pair round-trips through every surface
+    s = jr.from_roaring(rb, 2)
+    assert int(s.kind[0]) == jr.KIND_RUN
+    assert int(s.cardinality) == 1 << 16
+    assert int(s.size_in_bytes()) == rb.size_in_bytes()
+    assert bool(jr.contains(s, jnp.asarray([65535]))[0])
+    assert int(jr.slab_select(s, jnp.int32(65535))) == 65535
+    # AND with itself stays the same single run
+    _check_canonical(jr.slab_and(s, s), rb & rb, "full-chunk")
+
+
+def test_threshold_flips_under_add_remove():
+    """run -> array -> run and run -> bitmap flips follow the strict
+    best-of-three size rule during dynamic updates."""
+    rb = RoaringBitmap.from_range(0, 5000)
+    assert isinstance(rb.containers[0], RunContainer)
+    # punch every other hole: 2500 singleton runs -> array is smaller
+    for v in range(1, 5000, 2):
+        rb.remove(v)
+    assert isinstance(rb.containers[0], pr.ArrayContainer)
+    assert rb.cardinality == 2500
+    # refill: contiguous again; the 2014 array dynamics convert at >4096
+    # (bitmap), and runOptimize recovers the single run
+    for v in range(1, 5000, 2):
+        rb.add(v)
+    assert rb.cardinality == 5000
+    rb.run_optimize()
+    c = rb.containers[0]
+    assert isinstance(c, RunContainer) and c.n_runs == 1
+    # strictness: runs of length 2 cost exactly an array (4 == 2*2) and the
+    # tie goes to array; length 3 is strictly smaller and flips to run
+    tie = RoaringBitmap.from_ranges([(10 * i, 10 * i + 2) for i in range(40)])
+    assert isinstance(tie.containers[0], pr.ArrayContainer)
+    rb2 = RoaringBitmap.from_ranges([(10 * i, 10 * i + 3) for i in range(40)])
+    assert isinstance(rb2.containers[0], RunContainer)
+    for v in range(1000, 1400, 4):                  # scattered singletons
+        rb2.add(v)
+    assert isinstance(rb2.containers[0], pr.ArrayContainer)
+
+
+def test_oracle_cross_kind_algebra_matches_sets():
+    ra = RoaringBitmap.from_ranges(_rand_ranges(1, 50, 1 << 18))
+    rbm = RoaringBitmap.from_sorted_unique(_rand_set(30000, 1 << 18, 2))
+    arr = RoaringBitmap.from_sorted_unique(_rand_set(700, 1 << 18, 3))
+    sa = set(ra.to_array().tolist())
+    sb = set(rbm.to_array().tolist())
+    sc = set(arr.to_array().tolist())
+    for x, y, su, sv in [(ra, rbm, sa, sb), (rbm, ra, sb, sa),
+                         (ra, arr, sa, sc), (arr, ra, sc, sa)]:
+        assert set((x & y).to_array().tolist()) == (su & sv)
+        assert set((x | y).to_array().tolist()) == (su | sv)
+        assert set((x ^ y).to_array().tolist()) == (su ^ sv)
+        assert set(x.andnot(y).to_array().tolist()) == (su - sv)
+
+
+# ------------------------------------------------------- slab pair classes
+# the 7 new grid cells: run x {run, array, bitmap, empty} both ways
+RUN_PAIRS = {
+    "run_run": (_rand_ranges(1, 60, 1 << 18), _rand_ranges(2, 70, 1 << 18)),
+    "run_array": (_rand_ranges(3, 40, 1 << 18), _rand_set(800, 1 << 18, 4)),
+    "array_run": (_rand_set(800, 1 << 18, 5), _rand_ranges(6, 40, 1 << 18)),
+    "run_bitmap": (_rand_ranges(7, 50, 1 << 17), _rand_set(30000, 1 << 17, 8)),
+    "bitmap_run": (_rand_set(30000, 1 << 17, 9), _rand_ranges(10, 50, 1 << 17)),
+    "run_empty": (_rand_ranges(11, 30, 1 << 17), [(1 << 18, (1 << 18) + 50)]),
+    "empty_run": ([(1 << 18, (1 << 18) + 50)], _rand_ranges(12, 30, 1 << 17)),
+}
+
+
+def _build(spec):
+    if isinstance(spec, list):
+        return RoaringBitmap.from_ranges(spec)
+    return RoaringBitmap.from_sorted_unique(spec)
+
+
+@pytest.mark.parametrize("name", sorted(RUN_PAIRS))
+def test_slab_ops_run_pair_classes(name):
+    oa, ob = (_build(s) for s in RUN_PAIRS[name])
+    sa, sb = jr.from_roaring(oa, 16), jr.from_roaring(ob, 16)
+    _check_canonical(jr.slab_and(sa, sb), oa & ob, name + "/and")
+    _check_canonical(jr.slab_or(sa, sb, capacity=24), oa | ob, name + "/or")
+    _check_canonical(jr.slab_xor(sa, sb, capacity=24), oa ^ ob, name + "/xor")
+    _check_canonical(jr.slab_andnot(sa, sb), oa.andnot(ob), name + "/andnot")
+    assert int(jr.slab_and_card(sa, sb)) == len(oa & ob)
+    assert int(jr.slab_or_card(sa, sb)) == len(oa | ob)
+
+
+def test_run_boundary_4095_4096_4097():
+    """The array/bitmap threshold cardinalities, produced by run-shaped
+    inputs and outputs (single runs of exactly 4095/4096/4097 elements)."""
+    for n in (4095, 4096, 4097):
+        ra = RoaringBitmap.from_range(0, n)
+        rb = RoaringBitmap.from_range(n // 2, n // 2 + n)
+        sa, sb = jr.from_roaring(ra, 4), jr.from_roaring(rb, 4)
+        _check_canonical(jr.slab_and(sa, sb), ra & rb, f"and/{n}")
+        _check_canonical(jr.slab_or(sa, sb), ra | rb, f"or/{n}")
+        _check_canonical(jr.slab_xor(sa, sb), ra ^ rb, f"xor/{n}")
+        _check_canonical(jr.slab_andnot(sa, sb), ra.andnot(rb), f"andnot/{n}")
+
+
+def test_tri_backend_bit_identity_on_run_classes():
+    """Pallas-interpret and the XLA ref are bit-identical on (hits, card)
+    for one slab holding every run pair class, and the summed card matches
+    the paper-faithful oracle."""
+    a = RoaringBitmap.from_ranges(
+        _rand_ranges(20, 40, 1 << 16)                           # run chunk 0
+        + [(1 << 16, (1 << 16) + 3000)])                        # run chunk 1
+    a.ior(RoaringBitmap.from_sorted_unique(
+        (2 << 16) + _rand_set(900, 1 << 16, 21)))               # array chunk 2
+    a.ior(RoaringBitmap.from_sorted_unique(
+        (3 << 16) + _rand_set(30000, 1 << 16, 22)))             # bitmap chunk 3
+    b = RoaringBitmap.from_ranges(
+        _rand_ranges(23, 50, 1 << 16)                           # run x run
+        + [((3 << 16) + 100, (3 << 16) + 40000)])               # bitmap x run
+    b.ior(RoaringBitmap.from_sorted_unique(
+        (1 << 16) + _rand_set(25000, 1 << 16, 24)))             # run x bitmap
+    b.ior(RoaringBitmap.from_sorted_unique(
+        (2 << 16) + _rand_set(400, 1 << 16, 25)))               # array x array
+    sa, sb = jr.from_roaring(a, 8), jr.from_roaring(b, 8)
+    keys = jr._intersect_keys(sa, sb, 8)
+    da, ca, ka = jr._gather_raw(sa, keys)
+    db, cb, kb = jr._gather_raw(sb, keys)
+    meta = jr._dispatch_meta(ka, kb, ca, cb, jr._rows_nruns(da, ka),
+                             jr._rows_nruns(db, kb))
+    h_pl, c_pl = K.intersect_dispatch_pallas(da, db, meta, interpret=True)
+    h_ref, c_ref = R.intersect_dispatch_ref(da, db, meta)
+    np.testing.assert_array_equal(np.asarray(h_pl), np.asarray(h_ref))
+    np.testing.assert_array_equal(np.asarray(c_pl), np.asarray(c_ref))
+    assert int(jnp.sum(c_pl)) == len(a & b)
+    # and the full slab path (run-merge routed) agrees with the oracle
+    _check_canonical(jr.slab_and(sa, sb), a & b, "tri-backend/and")
+
+
+def test_row_canonicalize_matches_oracle_best_of_three():
+    """The public single-row runOptimize (row_canonicalize) must pick the
+    same kind and payload as the oracle's _canonical — the drift guard
+    between _pick_kind/_finalize and the per-row API."""
+    cases = [
+        np.arange(100),                                  # 1 run -> run
+        np.arange(4097),                                 # big run -> run
+        _rand_set(600, 1 << 16, 60),                     # scattered -> array
+        _rand_set(30000, 1 << 16, 61),                   # dense -> bitmap
+        np.concatenate([np.arange(0, 65536, 2)]),        # 32768 runs -> bitmap
+        np.arange(65536),                                # full chunk -> run
+        np.asarray([65535]),                             # sentinel value
+    ]
+    for vals in cases:
+        words = pr.array_to_bitmap(vals.astype(np.uint16))
+        bits = jnp.asarray(words.view(np.uint16))    # little-endian u64->u16
+        data, card, kind = jr.row_canonicalize(bits)
+        oc = pr._canonical(pr.BitmapContainer(words))
+        assert int(card) == oc.cardinality, len(vals)
+        assert int(kind) == _KIND_OF[type(oc)], (len(vals), int(kind))
+        if isinstance(oc, pr.RunContainer):
+            d = np.asarray(data).reshape(-1, 2)
+            np.testing.assert_array_equal(d[: oc.n_runs, 0],
+                                          oc.starts.astype(np.uint16))
+            np.testing.assert_array_equal(d[: oc.n_runs, 1],
+                                          oc.lengths.astype(np.uint16))
+        elif isinstance(oc, pr.ArrayContainer):
+            np.testing.assert_array_equal(
+                np.asarray(data)[: oc.cardinality], oc.to_array())
+        else:
+            np.testing.assert_array_equal(np.asarray(data), np.asarray(bits))
+
+
+def test_run_merge_matches_coverage_kernel():
+    """The slab layer's run-domain merge and the registry's coverage-AND
+    formulation of run x run are the same function extensionally."""
+    da = jr.from_roaring(RoaringBitmap.from_ranges(
+        _rand_ranges(30, 80, 1 << 16)), 2)
+    db = jr.from_roaring(RoaringBitmap.from_ranges(
+        _rand_ranges(31, 90, 1 << 16)), 2)
+    rowa, rowb = da.data[0], db.data[0]
+    pairs, card, n_out = jr._run_merge_row(rowa, rowb)
+    cov = np.asarray(jr.row_run_to_bits(rowa) & jr.row_run_to_bits(rowb))
+    want_card = int(np.bitwise_count(cov).sum())
+    assert int(card) == want_card
+    got_bits = np.asarray(jr.row_run_to_bits(pairs))
+    np.testing.assert_array_equal(got_bits, cov)
+
+
+def test_run_merge_bitmap_tie_at_2048_runs():
+    """run x run output landing exactly on the 4*nr == 8192 tie (nr == 2048,
+    card > 4096) must canonicalize to a real bitmap row: _finalize's
+    runs -> bits coverage lift, not the run-merge bits placeholder."""
+    a_ranges = [(8 * i, 8 * i + 6) for i in range(1026)]
+    b_ranges = [(8 * j + 3, 8 * j + 10) for j in range(1024)]
+    a = jr.from_ranges(np.array(a_ranges), 4)
+    b = jr.from_ranges(np.array(b_ranges), 4)
+    oracle = (RoaringBitmap.from_ranges(a_ranges)
+              & RoaringBitmap.from_ranges(b_ranges))
+    assert isinstance(oracle.containers[0], pr.BitmapContainer)
+    out = jr.slab_and(a, b)
+    assert int(out.kind[0]) == jr.KIND_BITMAP
+    _check_canonical(out, oracle, "2048-run tie")
+    member = int(oracle.to_array()[0])
+    assert bool(jr.contains(out, jnp.asarray([member]))[0])
+
+
+# --------------------------------------------------------- access surfaces
+def test_rank_select_roundtrip_with_runs():
+    vals = np.unique(np.concatenate([
+        np.arange(100, 70000),                       # runs across chunks
+        (3 << 16) + _rand_set(20000, 1 << 16, 40),   # bitmap chunk
+        (5 << 16) + _rand_set(300, 1 << 16, 41)]))   # array chunk
+    rb = RoaringBitmap.from_sorted_unique(vals).run_optimize()
+    s = jr.from_roaring(rb, 8)
+    assert {jr.KIND_ARRAY, jr.KIND_BITMAP, jr.KIND_RUN} <= \
+        set(np.asarray(s.kind).tolist())
+    for j in [0, 1, 4096, len(vals) // 2, len(vals) - 1]:
+        v = int(vals[j])
+        assert int(jr.slab_select(s, jnp.int32(j))) == v == rb.select(j)
+        assert int(jr.rank(s, jnp.asarray(v))) == rb.rank(v) == j + 1
+    assert int(jr.slab_select(s, jnp.int32(len(vals)))) == -1
+
+
+def test_size_in_bytes_matches_oracle():
+    for seed in (0, 1):
+        rb = RoaringBitmap.from_ranges(_rand_ranges(seed, 60, 1 << 18))
+        rb.ior(RoaringBitmap.from_sorted_unique(
+            (8 << 16) + _rand_set(10000, 1 << 16, seed + 10)))
+        s = jr.from_roaring(rb, 16)
+        assert int(s.size_in_bytes()) == rb.size_in_bytes()
+        # per-kind accounting: 2*card / 8192 / 4*n_runs (+4/container +8)
+        want = 8
+        for c in rb.containers:
+            want += 4 + c.size_in_bytes()
+        assert rb.size_in_bytes() == want
+
+
+def test_slab_run_optimize_and_union_many():
+    dense = np.arange(0, 40000)
+    s = jr.slab_run_optimize(jr.from_dense_array(dense, 4, 1 << 16))
+    assert int(s.kind[0]) == jr.KIND_RUN
+    np.testing.assert_array_equal(_values(s), dense)
+    sets = [RoaringBitmap.from_ranges(_rand_ranges(50 + i, 30, 1 << 18))
+            for i in range(4)]
+    slabs = [jr.from_roaring(x, 16) for x in sets]
+    got = jr.union_many_slabs(slabs, capacity=16)
+    _check_canonical(got, union_many(sets), "union_many")
+    assert (np.asarray(got.kind) == jr.KIND_RUN).any()
+
+
+# ---------------------------------------------------------------- consumers
+def test_kv_cache_free_slab_has_run_rows():
+    from repro.serve.kv_cache import RoaringPageTable
+    pt = RoaringPageTable(n_pages=100_000, page_size=4)
+    # fresh pool: one run per chunk, zero per-page materialization
+    fs = pt.free_slab()
+    kinds = np.asarray(fs.kind)
+    assert (kinds[np.asarray(fs.keys) != int(jr.KEY_SENTINEL)]
+            == jr.KIND_RUN).all()
+    assert int(fs.cardinality) == 100_000
+    pt.alloc(1, 400)                                 # 100 contiguous pages
+    pt.alloc(2, 200)                                 # 50 more
+    fs = pt.free_slab()
+    us = pt.used_slab()
+    assert (np.asarray(fs.kind) == jr.KIND_RUN).any()
+    assert (np.asarray(us.kind) == jr.KIND_RUN).any()
+    assert int(fs.cardinality) == len(pt.free)
+    assert int(us.cardinality) == 150
+    # free AND used must be empty (the allocator never aliases)
+    assert int(jr.slab_and_card(fs, us)) == 0
+    pt.release(1)
+    assert int(pt.free_slab().cardinality) == 100_000 - 50
+
+
+def test_mask_slabs_have_run_rows():
+    from repro.sparsity.masks import (MaskBuilder, causal_mask,
+                                      doc_boundary_mask, local_window_mask,
+                                      mask_overlap_cards, rows_to_slabs)
+    nb = 64
+    loc = local_window_mask(nb, 8)
+    # every window of more than 2 blocks is strictly smaller as one run
+    # (cards 1-2 canonicalize to arrays — 4 bytes/run is not a win there)
+    assert all(isinstance(c, RunContainer)
+               for r in loc for c in r.containers if c.cardinality > 2)
+    slabs = rows_to_slabs(loc)
+    kinds = np.asarray(slabs.kind)[:, 0]
+    assert (kinds == jr.KIND_RUN).sum() >= nb - 2
+    cau = causal_mask(nb)
+    doc = doc_boundary_mask(nb, [13, 40])
+    assert all(isinstance(r.containers[0], RunContainer)
+               for r in cau if len(r) > 2)
+    assert all(isinstance(r.containers[0], RunContainer)
+               for r in doc if len(r) > 2)
+    # device-side overlap over run rows agrees with host sets
+    cards = mask_overlap_cards(MaskBuilder(loc), MaskBuilder(doc))
+    for r in range(nb):
+        a = set(loc[r].to_array().tolist())
+        b = set(doc[r].to_array().tolist())
+        assert cards[r] == len(a & b), r
