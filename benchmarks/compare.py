@@ -46,9 +46,14 @@ def load_derived(path: str) -> dict:
     return out
 
 
-# within-run speedup rows that must hold on any machine (sparse/mixed A/B
-# plus the 2016-paper run-container regime); dense is excluded by
-# construction — the two paths converge there
+# within-run speedup rows that must hold on any machine (sparse/mixed A/B,
+# the 2016-paper run-container regime, and the wide-op rows: the union tree
+# reduction and the card-only wide scoring, each vs the sequential pairwise
+# fold). dense is excluded by construction — the two paths converge there —
+# and wide/and_n16/tree_reduce is informational only: an AND tree runs the
+# same N-1 combines as the fold (its win is one deferred canonicalization
+# and log depth for parallel hardware, not less CPU work), so its CPU ratio
+# hovers near 1x by design.
 SPEEDUP_ROWS = (
     "kernels/dispatch_ab/sparse/hybrid_dispatch",
     "kernels/dispatch_ab/mixed/hybrid_dispatch",
@@ -56,6 +61,8 @@ SPEEDUP_ROWS = (
     "dispatch_ab/d=2^-4/hybrid_dispatch",
     "run/run_run/hybrid_dispatch",
     "run/run_bitmap/hybrid_dispatch",
+    "wide/union_n16/tree_reduce",
+    "wide/score_n16/batched_card",
 )
 
 

@@ -115,6 +115,88 @@ def run_ab(quick: bool = False):
     return rows
 
 
+def wide_ab(quick: bool = False):
+    """A/B on wide horizontal ops (paper Alg. 4 / the CRoaring aggregation
+    layer): the query engine's log-depth tree reduction vs the sequential
+    pairwise fold of N-1 canonicalizing slab ops, N = 16 slabs.
+
+    The fold pays a full best-of-three canonicalization (and key re-sort)
+    per step; the tree pays ceil(log2 N) kind-dispatching combine levels
+    with deferred cardinality and ONE canonicalization + recount at the
+    root. The derived column is the within-run fold/tree speedup
+    (machine-independent; the union and card-only-scoring rows are gated
+    >= 2x in benchmarks/compare.py --speedup-mode, the AND-tree row is
+    informational — see the SPEEDUP_ROWS comment there).
+    """
+    import functools as _ft
+
+    import jax
+    from repro import index
+    from repro.core import RoaringBitmap, jax_roaring as jr
+    from .synth import gen_run_ranges
+
+    rows = []
+    rng = np.random.default_rng(11)
+    N, C = 16, 8
+    repeats = 3 if quick else 5
+
+    # --- wide union: tree reduction vs pairwise slab_or fold -----------------
+    # run-heavy operands — the consumer regime (KV free-pool rebuilds, mask
+    # pattern merges) and the fold's worst case: every fold step's output
+    # canonicalizes to run rows, so the fold pays the cond-guarded O(2^16)
+    # bits->runs extraction N-1 times where the tree pays it once at the
+    # root (plus N-1 re-lifts of those runs back to words on the next step).
+    slabs = [jr.from_roaring(
+        RoaringBitmap.from_ranges(gen_run_ranges(
+            0.20, 40.0, 20 + i, int(0.20 * (C << 16)))), C)
+        for i in range(N)]
+    f_tree = jax.jit(lambda *ss: jr.union_many_slabs(list(ss), capacity=C))
+
+    def fold(op, *ss):
+        acc = ss[0]
+        for s in ss[1:]:
+            acc = op(acc, s, capacity=C)
+        return acc
+
+    f_fold = jax.jit(_ft.partial(fold, jr.slab_or))
+    assert int(f_tree(*slabs).cardinality) == int(f_fold(*slabs).cardinality)
+    us_tree = _t(lambda: f_tree(*slabs), repeats)
+    us_fold = _t(lambda: f_fold(*slabs), repeats)
+    rows.append((f"wide/union_n{N}/pairwise_fold", round(us_fold, 1), ""))
+    rows.append((f"wide/union_n{N}/tree_reduce", round(us_tree, 1),
+                 round(us_fold / max(us_tree, 1e-9), 2)))
+
+    # --- wide AND: engine tree vs pairwise slab_and fold ---------------------
+    # overlapping operands (each slab keeps ~97% of a shared base set), the
+    # realistic wide-AND regime — N conjunctive filters that each pass most
+    # rows. With independent random operands the fold degenerates (the first
+    # AND empties the intermediate and the remaining N-2 steps are no-ops),
+    # which benchmarks nothing.
+    base = np.unique(rng.integers(0, C << 16, 60_000))
+    and_slabs = []
+    for i in range(N):
+        keep = rng.random(base.size) > 0.03
+        and_slabs.append(jr.from_dense_array(base[keep], C, 1 << 17))
+    stack = index.stack_from_slabs(and_slabs, capacity=C)
+    f_wand = jax.jit(index.wide_intersect)
+    f_fand = jax.jit(_ft.partial(fold, jr.slab_and))
+    assert int(f_wand(stack).cardinality) == \
+        int(f_fand(*and_slabs).cardinality)
+    us_wand = _t(lambda: f_wand(stack), repeats)
+    us_fand = _t(lambda: f_fand(*and_slabs), repeats)
+    rows.append((f"wide/and_n{N}/pairwise_fold", round(us_fand, 1), ""))
+    rows.append((f"wide/and_n{N}/tree_reduce", round(us_wand, 1),
+                 round(us_fand / max(us_wand, 1e-9), 2)))
+
+    # --- cardinality-only wide scoring (stacked batched-meta dispatch) -------
+    q = and_slabs[0]
+    f_score = jax.jit(index.batched_and_card)
+    us_score = _t(lambda: f_score(stack, q), repeats)
+    rows.append((f"wide/score_n{N}/batched_card", round(us_score, 1),
+                 round(us_fand / max(us_score, 1e-9), 2)))
+    return rows
+
+
 def run(quick: bool = False):
     rows = []
     from repro.core import jax_roaring as jr
@@ -147,6 +229,9 @@ def run(quick: bool = False):
 
     # run-container dispatch vs bitmap-domain A/B (2016 follow-up regime)
     rows.extend(run_ab(quick=quick))
+
+    # wide horizontal ops: tree reduction vs sequential pairwise fold
+    rows.extend(wide_ab(quick=quick))
 
     # sparse attention ref vs flash ref at 2k
     from repro.models import attention as A

@@ -1,4 +1,6 @@
-"""Quickstart: the Roaring bitmap core, the paper's claims in 60 seconds.
+"""Quickstart: the Roaring bitmap core, the paper's claims in 60 seconds —
+plus the device slab (run containers, runOptimize, exact sizing) and the
+batched wide-query engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -50,6 +52,35 @@ def main():
 
     # --- rank/select ---------------------------------------------------------------
     print(f"rank(500000) = {ra.rank(500_000)}, select(1000) = {ra.select(1000)}")
+
+    # --- the device slab (PR 2 API): run rows, runOptimize, exact sizing ------------
+    from repro.core import jax_roaring as jr
+
+    dense = jr.from_dense_array(np.arange(0, 40_000), capacity=4,
+                                max_elems=1 << 16)
+    opt = jr.slab_run_optimize(dense)            # best-of-three, on device
+    runs = jr.from_ranges([(0, 40_000)], capacity=4)   # run rows directly
+    print(f"\nslab [0, 40000): {int(dense.size_in_bytes())} B as "
+          f"array/bitmap rows -> {int(opt.size_in_bytes())} B after "
+          f"runOptimize (== from_ranges: {int(runs.size_in_bytes())} B)")
+    hits = jr.contains(opt, np.asarray([39_999, 40_000]))
+    assert bool(hits[0]) and not bool(hits[1])
+
+    # --- the wide-query engine: Algorithm 4 at query-engine scale -------------------
+    from repro import index
+
+    posting = [jr.from_dense_array(
+        np.unique(rng.integers(0, 1 << 18, 4_000)), 8, 1 << 14)
+        for _ in range(8)]
+    stack = index.stack_from_slabs(posting, capacity=8)
+    u = index.wide_union(stack)                  # log-depth tree reduction
+    expr = index.andnot(index.or_(index.leaf(0), index.leaf(1)),
+                        index.leaf(2))
+    n = int(index.execute_card(stack, expr))     # no result materialized
+    scores, ids = index.topk_by_card(stack, posting[0], k=3)
+    print(f"wide union of 8 slabs: |∪| = {int(u.cardinality)}; "
+          f"|(0 ∪ 1) \\ 2| = {n}; top-3 vs slab 0 = "
+          f"{np.asarray(ids).tolist()} (scores {np.asarray(scores).tolist()})")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,28 @@ KIND_RUN = _D.KIND_RUN           # 3
 # row is currently represented, before best-of-three picks its final kind)
 FORM_ARRAY, FORM_BITS, FORM_RUNS = 0, 1, 2
 
+# The public slab API. Every symbol listed here is documented in docs/API.md
+# (tests/test_docs.py asserts the two stay in sync).
+__all__ = [
+    # layout constants
+    "CHUNK_BITS", "CHUNK_SIZE", "ARRAY_MAX", "ROW_WORDS", "MAX_RUNS",
+    "KEY_SENTINEL", "KIND_EMPTY", "KIND_ARRAY", "KIND_BITMAP", "KIND_RUN",
+    # container slab + constructors / exporters
+    "RoaringSlab", "empty", "from_indices", "from_dense_array",
+    "from_roaring", "from_ranges", "to_roaring", "to_indices", "extract_row",
+    "slab_run_optimize",
+    # membership / rank / select
+    "contains", "rank", "slab_select",
+    # pairwise set algebra (kind-dispatch engine)
+    "slab_and", "slab_or", "slab_xor", "slab_andnot",
+    "slab_and_card", "slab_or_card", "slab_jaccard",
+    # batched / wide ops
+    "stack_slabs", "slab_and_many", "slab_and_card_many",
+    "union_many_slabs",
+    # legacy bitmap-domain A/B baselines
+    "slab_and_bitmap_domain", "slab_or_bitmap_domain",
+]
+
 
 class RoaringSlab(NamedTuple):
     """Static-capacity Roaring bitmap. ``C = keys.shape[0]`` containers."""
@@ -102,6 +124,12 @@ class RoaringSlab(NamedTuple):
 
 
 def empty(capacity: int) -> RoaringSlab:
+    """All-empty slab of static container capacity ``capacity``.
+
+    Every row has ``kind == KIND_EMPTY``, ``card == 0``, key
+    ``KEY_SENTINEL`` and zeroed payload — the identity element of
+    ``slab_or`` / ``union_many_slabs``.
+    """
     return RoaringSlab(
         keys=jnp.full((capacity,), KEY_SENTINEL, dtype=jnp.int32),
         card=jnp.zeros((capacity,), dtype=jnp.int32),
@@ -389,15 +417,46 @@ def from_ranges(ranges, capacity: int) -> RoaringSlab:
     return from_roaring(pr.RoaringBitmap.from_ranges(ranges), capacity)
 
 
+def to_roaring(slab: RoaringSlab):
+    """Host-side reverse bridge: RoaringSlab -> ``py_roaring.RoaringBitmap``,
+    kind-preserving (the exact inverse of ``from_roaring``).
+
+    Array rows become ``ArrayContainer`` (the packed ``card`` prefix), bitmap
+    rows become ``BitmapContainer`` (u16 words reassembled to little-endian
+    u64), run rows become ``RunContainer`` (the valid ``(start, len-1)``
+    pairs). A canonical slab — any set-algebra or engine output — therefore
+    round-trips bit-identically: same keys, same container kinds, same
+    payloads.
+    """
+    from repro.core import py_roaring as pr
+
+    keys = np.asarray(slab.keys)
+    card = np.asarray(slab.card)
+    kind = np.asarray(slab.kind)
+    data = np.asarray(slab.data)
+    rb = pr.RoaringBitmap()
+    for i in range(keys.shape[0]):
+        if kind[i] == KIND_EMPTY:
+            continue
+        if kind[i] == KIND_ARRAY:
+            c = pr.ArrayContainer(data[i, : card[i]])
+        elif kind[i] == KIND_BITMAP:
+            c = pr.BitmapContainer(np.ascontiguousarray(data[i]).view(
+                np.uint64), cardinality=int(card[i]))
+        else:
+            p = data[i].reshape(MAX_RUNS, 2).astype(np.int64)
+            valid = (p[:, 0] + p[:, 1]) < CHUNK_SIZE
+            c = pr.RunContainer(p[valid, 0], p[valid, 1])
+        rb.keys.append(int(keys[i]))
+        rb.containers.append(c)
+    return rb
+
+
 def slab_run_optimize(slab: RoaringSlab) -> RoaringSlab:
     """Device-side ``runOptimize``: re-canonicalize every row best-of-three
     through the engine (array rows runify via the O(4096) adjacency scatter,
     bitmap rows via the cond-guarded edge extraction)."""
-    form = jnp.where(slab.kind == KIND_BITMAP, FORM_BITS,
-                     jnp.where(slab.kind == KIND_RUN, FORM_RUNS, FORM_ARRAY))
-    nr = _rows_nruns(slab.data, slab.kind)
-    return _finalize(slab.keys, slab.card, form, slab.data, slab.data,
-                     slab.data, nr)
+    return _finalize_rows(slab.keys, slab.data, slab.card, slab.kind)
 
 
 def to_indices(slab: RoaringSlab, max_out: int) -> tuple[jax.Array, jax.Array]:
@@ -597,14 +656,19 @@ def _pad_keys(keys: jax.Array, capacity: int) -> jax.Array:
         [keys, jnp.full((capacity - n,), KEY_SENTINEL, jnp.int32)])
 
 
+def _merge_keys_many(key_cols: list[jax.Array], capacity: int) -> jax.Array:
+    """Union of N sorted key columns, deduplicated (duplicates demoted to
+    ``KEY_SENTINEL`` and re-sorted), padded/truncated to ``capacity`` — the
+    single key-alignment idiom shared by the pairwise ops, the tree union,
+    and ``index.stack_from_slabs``."""
+    srt = jnp.sort(jnp.concatenate(key_cols))
+    dup = jnp.concatenate([jnp.array([False]), srt[1:] == srt[:-1]])
+    return _pad_keys(jnp.sort(jnp.where(dup, KEY_SENTINEL, srt)), capacity)
+
+
 def _merge_keys(a: RoaringSlab, b: RoaringSlab, capacity: int) -> jax.Array:
     """Union of the two sorted key sets, deduplicated, padded with sentinel."""
-    cat = jnp.concatenate([a.keys, b.keys])
-    srt = jnp.sort(cat)
-    dup = jnp.concatenate([jnp.array([False]), srt[1:] == srt[:-1]])
-    vals = jnp.where(dup, KEY_SENTINEL, srt)
-    vals = jnp.sort(vals)
-    return _pad_keys(vals, capacity)
+    return _merge_keys_many([a.keys, b.keys], capacity)
 
 
 def _intersect_keys(a: RoaringSlab, b: RoaringSlab, capacity: int) -> jax.Array:
@@ -874,6 +938,207 @@ def _dispatch_meta(ka, kb, ca, cb, ra=None, rb=None) -> jax.Array:
         jnp.int32)
 
 
+# =============================================================================
+# row-state algebra: deferred-canonicalization combines shared by the pairwise
+# slab ops, the log-depth tree reduction, and the repro.index query engine.
+#
+# A *row state* is the triple (data u16[M, 4096], card i32[M], kind i32[M]) of
+# key-aligned container rows — a RoaringSlab minus its keys, and minus the
+# canonical-kind guarantee: intermediate states defer best-of-three
+# (runOptimize) until a single `_finalize_rows` at the root of a combine tree,
+# so an N-way reduction pays one canonicalization pass, not N-1.
+# =============================================================================
+
+def _finalize_rows(keys, data, card, kind) -> RoaringSlab:
+    """Row state -> canonical RoaringSlab (single deferred best-of-three).
+
+    Maps each row's kind tag to the engine form it is stored in (array rows
+    are packed prefixes, bitmap rows word rows, run rows packed pairs) and
+    runs ``_finalize``: cheap O(4096) conversions unguarded, the O(2^16)
+    bits->array / bits->runs extractions ``lax.cond``-guarded, dead rows
+    keyed out and re-sorted.
+    """
+    form = jnp.where(kind == KIND_BITMAP, FORM_BITS,
+                     jnp.where(kind == KIND_RUN, FORM_RUNS, FORM_ARRAY))
+    nr = _rows_nruns(data, kind)
+    return _finalize(keys, card, form, data, data, data, nr)
+
+
+def _or_rows(da, ca, ka, db, cb, kb, *, word_op=jnp.bitwise_or,
+             xor: bool = False, defer_card: bool = False):
+    """One OR/XOR combine step over key-aligned row pairs -> row state.
+
+    Routed by the registry's union policy (``dispatch.union_route``): array
+    pairs whose merged size provably stays under the 4096 threshold merge in
+    array domain (sorted merge, O(8192 log)); every other live pair goes
+    through the bitmap domain with the kind-dispatching lift — array rows
+    scatter, run rows range-mask coverage, both O(4096) — and a fused
+    popcount. Both passes are ``lax.cond``-guarded. Output kinds are the
+    *deferred* {EMPTY, ARRAY, BITMAP}; no canonicalization happens here.
+
+    ``defer_card=True`` is Algorithm 4's deferred-cardinality discipline for
+    OR reduction trees: bitmap-path rows get the ``CHUNK_SIZE`` upper bound
+    instead of a popcount. Sound mid-tree because no consumer reads a
+    BITMAP row's card before the root — the union routing policy only
+    inspects cards of array-ish rows (whose merge cards stay exact) — and
+    the root recounts via ``_recount_bitmap_rows`` before finalization.
+    """
+    M = ka.shape[0]
+
+    def merge_pass(args):
+        da, ca, db, cb = args
+        return jax.vmap(
+            functools.partial(_row_merge_sparse, xor=xor))(da, ca, db, cb)
+
+    def merge_skip(args):
+        return (jnp.full((M, ROW_WORDS), 0xFFFF, jnp.uint16),
+                jnp.zeros((M,), jnp.int32))
+
+    def bitmap_pass(args):
+        da, ca, ka, db, cb, kb = args
+        out = word_op(_lift_rows(da, ca, ka), _lift_rows(db, cb, kb))
+        if defer_card:
+            return out, jnp.full((M,), CHUNK_SIZE, jnp.int32)
+        return out, jax.vmap(row_popcount)(out)
+
+    def bitmap_skip(args):
+        return (jnp.zeros((M, ROW_WORDS), jnp.uint16),
+                jnp.zeros((M,), jnp.int32))
+
+    small, use_bitmap = _D.union_route(ka, kb, ca, cb, ARRAY_MAX)
+    merge_rows, merge_card = jax.lax.cond(jnp.any(small), merge_pass,
+                                          merge_skip, (da, ca, db, cb))
+    bits, bcard = jax.lax.cond(jnp.any(use_bitmap), bitmap_pass, bitmap_skip,
+                               (da, ca, ka, db, cb, kb))
+    card = jnp.where(use_bitmap, bcard, merge_card)
+    data = jnp.where(use_bitmap[:, None], bits, merge_rows)
+    kind = jnp.where(card == 0, KIND_EMPTY,
+                     jnp.where(use_bitmap, KIND_BITMAP, KIND_ARRAY))
+    return data, card, kind
+
+
+_or_rows_deferred = functools.partial(_or_rows, defer_card=True)
+
+
+def _recount_bitmap_rows(data, card, kind):
+    """Exact cards for word rows at the root of a deferred-cardinality OR
+    tree: ONE cond-guarded popcount pass (Algorithm 4 line 16's 'recount
+    once at the end'), replacing the ``CHUNK_SIZE`` placeholders that
+    ``_or_rows(defer_card=True)`` leaves on bitmap-path rows."""
+    is_b = kind == KIND_BITMAP
+    masked = jnp.where(is_b[:, None], data, jnp.uint16(0))
+    cnt = jax.lax.cond(
+        jnp.any(is_b),
+        lambda m: jax.vmap(row_popcount)(m),
+        lambda m: jnp.zeros((data.shape[0],), jnp.int32), masked)
+    return jnp.where(is_b, cnt, card)
+
+
+def _and_rows(da, ca, ka, db, cb, kb):
+    """One AND combine step over key-aligned row pairs -> row state.
+
+    The full 4x4 kind-dispatch grid through ``intersect_dispatch`` (Pallas on
+    TPU, XLA reference elsewhere): mask-semantic cells compact the hit mask
+    against the array side (output provably <= min(card) <= 4096, stays
+    packed); bits-semantic cells — including run x run, which the kernel
+    computes as the coverage AND — stay word rows with the fused-popcount
+    cardinality. Deferred kinds {EMPTY, ARRAY, BITMAP}; the run-domain
+    run-merge is a ``slab_and``-only specialization.
+    """
+    from repro.kernels.roaring import ops as _kops
+    ra = _rows_nruns(da, ka)
+    rb = _rows_nruns(db, kb)
+    meta = _dispatch_meta(ka, kb, ca, cb, ra, rb)
+    hits, card = _kops.intersect_dispatch(da, db, meta)
+    bits_m = _D.out_mask("bits", ka, kb) | _D.route_mask("run_merge", ka, kb)
+    src = jnp.where(_D.out_mask("mask_b", ka, kb)[:, None], db, da)
+    arr_rows = jax.vmap(_compact_row)(src, (hits == 1) & ~bits_m[:, None])
+    data = jnp.where(bits_m[:, None], hits, arr_rows)
+    kind = jnp.where(card == 0, KIND_EMPTY,
+                     jnp.where(bits_m, KIND_BITMAP, KIND_ARRAY))
+    return data, card, kind
+
+
+def _andnot_rows(da, ca, ka, db, cb, kb):
+    """One ANDNOT combine step (A \\ B per row pair) -> row state.
+
+    Registry ``andnot_route``: array-A rows probe B in place whatever B's
+    kind (binary search / bit probe / gallop-in-ranges — result provably
+    <= card_a <= 4096, stays packed); bitmap- and run-A rows take the
+    ``lax.cond``-guarded bitmap-domain pass with the cheap run lift.
+    """
+    M = ka.shape[0]
+    slot = jnp.arange(ROW_WORDS, dtype=jnp.int32)
+    probe_a, lift_a = _D.andnot_route(ka, kb)
+
+    def probe_row(dav, cav, dbv, cbv, kbv, rbv):
+        pos = jnp.searchsorted(dbv, dav)
+        pos_c = jnp.clip(pos, 0, ROW_WORDS - 1)
+        arr_in = (dbv[pos_c] == dav) & (pos < cbv)
+        v = dav.astype(jnp.int32)
+        word = dbv[v >> 4].astype(jnp.int32)
+        bit_in = ((word >> (v & 15)) & 1) == 1
+        run_in = _D._run_covered(dbv.reshape(_D.ROW_SHAPE), rbv,
+                                 v.reshape(_D.ROW_SHAPE)).reshape(ROW_WORDS)
+        in_b = jnp.where(kbv == KIND_BITMAP, bit_in,
+                         jnp.where(kbv == KIND_ARRAY, arr_in,
+                                   jnp.where(kbv == KIND_RUN, run_in, False)))
+        return (slot < cav) & ~in_b
+
+    def bitmap_pass(args):
+        da, ca, ka, db, cb, kb = args
+        out = jnp.bitwise_and(_lift_rows(da, ca, ka),
+                              ~_lift_rows(db, cb, kb))
+        return out, jax.vmap(row_popcount)(out)
+
+    def bitmap_skip(args):
+        return (jnp.zeros((M, ROW_WORDS), jnp.uint16),
+                jnp.zeros((M,), jnp.int32))
+
+    rb = _rows_nruns(db, kb)
+    keep = jax.vmap(probe_row)(da, ca, db, cb, kb, rb) & probe_a[:, None]
+    arr_rows = jax.vmap(_compact_row)(da, keep)
+    acard = jnp.sum(keep.astype(jnp.int32), axis=1)
+    bits, bcard = jax.lax.cond(jnp.any(lift_a), bitmap_pass, bitmap_skip,
+                               (da, ca, ka, db, cb, kb))
+    card = jnp.where(lift_a, bcard, acard)
+    data = jnp.where(lift_a[:, None], bits, arr_rows)
+    kind = jnp.where(card == 0, KIND_EMPTY,
+                     jnp.where(lift_a, KIND_BITMAP, KIND_ARRAY))
+    return data, card, kind
+
+
+def _tree_reduce_rows(data, card, kind, combine=_or_rows):
+    """Log-depth segmented reduction over the leading (slab) axis.
+
+    ``data/card/kind``: stacked key-aligned row states ``[N, C, ...]``. Each
+    level pairs adjacent slabs and runs one flattened ``combine`` over
+    ``(N/2) * C`` rows — kind-dispatching at every level — carrying the odd
+    tail unchanged; ceil(log2 N) levels total, no canonicalization inside
+    (callers finish with ``_finalize_rows``).
+    """
+    C, W = data.shape[1], data.shape[2]
+    while data.shape[0] > 1:
+        n = data.shape[0]
+        half = n // 2
+        ev = slice(0, 2 * half, 2)
+        od = slice(1, 2 * half, 2)
+        d, c, k = combine(
+            data[ev].reshape(half * C, W), card[ev].reshape(half * C),
+            kind[ev].reshape(half * C),
+            data[od].reshape(half * C, W), card[od].reshape(half * C),
+            kind[od].reshape(half * C))
+        d = d.reshape(half, C, W)
+        c = c.reshape(half, C)
+        k = k.reshape(half, C)
+        if n % 2:
+            d = jnp.concatenate([d, data[2 * half:]], axis=0)
+            c = jnp.concatenate([c, card[2 * half:]], axis=0)
+            k = jnp.concatenate([k, kind[2 * half:]], axis=0)
+        data, card, kind = d, c, k
+    return data[0], card[0], kind[0]
+
+
 def slab_and(a: RoaringSlab, b: RoaringSlab,
              capacity: int | None = None) -> RoaringSlab:
     """Kind-dispatch intersection over the registry's 4x4 AND grid.
@@ -968,7 +1233,22 @@ def slab_and_card_many(query: RoaringSlab,
 
 
 def _lift_rows(data, card, kind):
-    return jax.vmap(row_to_bits)(data, card, kind)
+    """Batched bitmap-domain view of raw rows, with a runtime fast path:
+    when every live row is already a word row (tree-reduction levels past
+    the first — union intermediates are bitmap-form by construction), the
+    kind-dispatching lift (array scatter + run coverage + selects) is
+    skipped wholesale by ``lax.cond`` and only the empty-row mask applies."""
+    need = (kind != KIND_BITMAP) & (kind != KIND_EMPTY)
+
+    def lift(args):
+        data, card, kind = args
+        return jax.vmap(row_to_bits)(data, card, kind)
+
+    def passthrough(args):
+        data, _, kind = args
+        return data * (kind != KIND_EMPTY)[:, None].astype(jnp.uint16)
+
+    return jax.lax.cond(jnp.any(need), lift, passthrough, (data, card, kind))
 
 
 def _row_merge_sparse(da, ca, db, cb, *, xor: bool):
@@ -996,54 +1276,33 @@ def _row_merge_sparse(da, ca, db, cb, *, xor: bool):
 
 def _union_like(a: RoaringSlab, b: RoaringSlab, capacity: int,
                 word_op, xor: bool) -> RoaringSlab:
-    """Shared OR/XOR pipeline, routed by the registry's union policy:
-    sparse array pairs merge in array domain; everything else goes through
-    the bitmap domain with the kind-dispatching lift (run rows lift via the
-    O(4096) coverage scatter, not the 2^16 domain). Both passes are
-    lax.cond-guarded symmetrically, and the engine's best-of-three
-    finalization re-runs run-shaped outputs."""
+    """Shared OR/XOR pipeline: merge the key sets, run one ``_or_rows``
+    combine step (registry union policy — see its docstring), and finalize
+    best-of-three so run-shaped outputs come back out as run rows."""
     keys = _merge_keys(a, b, capacity)
     da, ca, ka = _gather_raw(a, keys)
     db, cb, kb = _gather_raw(b, keys)
-    small, use_bitmap = _D.union_route(ka, kb, ca, cb, ARRAY_MAX)
-
-    def merge_pass(args):
-        da, ca, db, cb = args
-        return jax.vmap(
-            functools.partial(_row_merge_sparse, xor=xor))(da, ca, db, cb)
-
-    def merge_skip(args):
-        return (jnp.full((keys.shape[0], ROW_WORDS), 0xFFFF, jnp.uint16),
-                jnp.zeros((keys.shape[0],), jnp.int32))
-
-    merge_rows, merge_card = jax.lax.cond(jnp.any(small), merge_pass,
-                                          merge_skip, (da, ca, db, cb))
-
-    def bitmap_pass(args):
-        da, ca, ka, db, cb, kb = args
-        out = word_op(_lift_rows(da, ca, ka), _lift_rows(db, cb, kb))
-        return out, jax.vmap(row_popcount)(out)
-
-    def skip(args):
-        return (jnp.zeros((keys.shape[0], ROW_WORDS), jnp.uint16),
-                jnp.zeros((keys.shape[0],), jnp.int32))
-
-    bits, bcard = jax.lax.cond(jnp.any(use_bitmap), bitmap_pass, skip,
-                               (da, ca, ka, db, cb, kb))
-    card = jnp.where(use_bitmap, bcard, merge_card)
-    form = jnp.where(use_bitmap, FORM_BITS, FORM_ARRAY)
-    return _finalize(keys, card, form, merge_rows, bits,
-                     jnp.full_like(bits, 0xFFFF), jnp.zeros_like(card))
+    data, card, kind = _or_rows(da, ca, ka, db, cb, kb, word_op=word_op,
+                                xor=xor)
+    return _finalize_rows(keys, data, card, kind)
 
 
 def slab_or(a: RoaringSlab, b: RoaringSlab,
             capacity: int | None = None) -> RoaringSlab:
+    """A ∪ B through the kind-dispatch engine (canonical output).
+
+    Capacity defaults to ``a.capacity + b.capacity`` (the key sets may be
+    disjoint); pass a tighter static ``capacity`` when the union's key count
+    is known to fit.
+    """
     return _union_like(a, b, capacity or (a.capacity + b.capacity),
                        jnp.bitwise_or, xor=False)
 
 
 def slab_xor(a: RoaringSlab, b: RoaringSlab,
              capacity: int | None = None) -> RoaringSlab:
+    """A ⊕ B (symmetric difference), same routing/canonical discipline as
+    ``slab_or`` with the sorted-merge dropping equal pairs."""
     return _union_like(a, b, capacity or (a.capacity + b.capacity),
                        jnp.bitwise_xor, xor=True)
 
@@ -1059,44 +1318,8 @@ def slab_andnot(a: RoaringSlab, b: RoaringSlab,
     keys = _pad_keys(a.keys, capacity)
     da, ca, ka = _gather_raw(a, keys)
     db, cb, kb = _gather_raw(b, keys)
-    slot = jnp.arange(ROW_WORDS, dtype=jnp.int32)
-    probe_a, lift_a = _D.andnot_route(ka, kb)
-
-    def probe_row(dav, cav, dbv, cbv, kbv, rbv):
-        pos = jnp.searchsorted(dbv, dav)
-        pos_c = jnp.clip(pos, 0, ROW_WORDS - 1)
-        arr_in = (dbv[pos_c] == dav) & (pos < cbv)
-        v = dav.astype(jnp.int32)
-        word = dbv[v >> 4].astype(jnp.int32)
-        bit_in = ((word >> (v & 15)) & 1) == 1
-        run_in = _D._run_covered(dbv.reshape(_D.ROW_SHAPE), rbv,
-                                 v.reshape(_D.ROW_SHAPE)).reshape(ROW_WORDS)
-        in_b = jnp.where(kbv == KIND_BITMAP, bit_in,
-                         jnp.where(kbv == KIND_ARRAY, arr_in,
-                                   jnp.where(kbv == KIND_RUN, run_in, False)))
-        return (slot < cav) & ~in_b
-
-    rb = _rows_nruns(db, kb)
-    keep = jax.vmap(probe_row)(da, ca, db, cb, kb, rb) & probe_a[:, None]
-    arr_rows = jax.vmap(_compact_row)(da, keep)
-    acard = jnp.sum(keep.astype(jnp.int32), axis=1)
-
-    def bitmap_pass(args):
-        da, ca, ka, db, cb, kb = args
-        out = jnp.bitwise_and(_lift_rows(da, ca, ka),
-                              ~_lift_rows(db, cb, kb))
-        return out, jax.vmap(row_popcount)(out)
-
-    def skip(args):
-        return (jnp.zeros((keys.shape[0], ROW_WORDS), jnp.uint16),
-                jnp.zeros((keys.shape[0],), jnp.int32))
-
-    bits, bcard = jax.lax.cond(jnp.any(lift_a), bitmap_pass, skip,
-                               (da, ca, ka, db, cb, kb))
-    card = jnp.where(lift_a, bcard, acard)
-    form = jnp.where(lift_a, FORM_BITS, FORM_ARRAY)
-    return _finalize(keys, card, form, arr_rows, bits,
-                     jnp.full_like(bits, 0xFFFF), jnp.zeros_like(card))
+    data, card, kind = _andnot_rows(da, ca, ka, db, cb, kb)
+    return _finalize_rows(keys, data, card, kind)
 
 
 # =============================================================================
@@ -1139,6 +1362,12 @@ def _binary_bits_op(a: RoaringSlab, b: RoaringSlab, word_op, capacity: int,
 
 def slab_and_bitmap_domain(a: RoaringSlab, b: RoaringSlab,
                            capacity: int | None = None) -> RoaringSlab:
+    """A ∩ B through the pre-dispatch bitmap-domain path (A/B baseline).
+
+    Same values/card as ``slab_and`` but 2-kind canonicalization only (no
+    run outputs) and the full per-row O(2^16) tax — benchmark baseline, not
+    a production path.
+    """
     return _binary_bits_op(a, b, jnp.bitwise_and,
                            capacity or min(a.capacity, b.capacity) * 2,
                            intersection=True)
@@ -1146,28 +1375,34 @@ def slab_and_bitmap_domain(a: RoaringSlab, b: RoaringSlab,
 
 def slab_or_bitmap_domain(a: RoaringSlab, b: RoaringSlab,
                           capacity: int | None = None) -> RoaringSlab:
+    """A ∪ B through the pre-dispatch bitmap-domain path (A/B baseline);
+    see ``slab_and_bitmap_domain``."""
     return _binary_bits_op(a, b, jnp.bitwise_or,
                            capacity or (a.capacity + b.capacity),
                            intersection=False)
 
 
 def union_many_slabs(slabs: list[RoaringSlab], capacity: int) -> RoaringSlab:
-    """Algorithm 4, TPU form, routed through the engine: key-aligned
-    segmented OR-reduction with the kind-dispatching lift (array rows
-    scatter, run rows range-mask — both O(4096), no unconditional
-    bitmap-domain materialization of packed inputs) and cardinality computed
-    once at the end (deferred popcount). Final canonicalization is the
-    engine's best-of-three pass, so run-shaped unions (e.g. the KV free
-    pool) come back out as run rows."""
-    all_keys = jnp.concatenate([s.keys for s in slabs])
-    srt = jnp.sort(all_keys)
-    dup = jnp.concatenate([jnp.array([False]), srt[1:] == srt[:-1]])
-    keys = _pad_keys(jnp.sort(jnp.where(dup, KEY_SENTINEL, srt)), capacity)
-    acc = jnp.zeros((capacity, ROW_WORDS), jnp.uint16)
-    for s in slabs:                                   # static unroll (fleet size)
-        bits, _ = _gather_rows(s, keys)
-        acc = jnp.bitwise_or(acc, bits)               # deferred cardinality
-    card = jax.vmap(row_popcount)(acc)
-    form = jnp.full_like(card, FORM_BITS)
-    return _finalize(keys, card, form, jnp.full_like(acc, 0xFFFF), acc,
-                     jnp.full_like(acc, 0xFFFF), jnp.zeros_like(card))
+    """Algorithm 4, TPU form: log-depth tree reduction through the engine.
+
+    The merged key set is computed once; every slab's rows are gathered
+    key-aligned in *native* container form, and ``_tree_reduce_rows`` runs
+    ceil(log2 N) ``_or_rows`` levels — kind-dispatching at every level:
+    sparse array pairs merge in array domain, everything else goes through
+    the bitmap domain with the O(4096) kind-aware lift (run rows range-mask,
+    never the 2^16 element domain). Canonicalization is a *single* deferred
+    best-of-three pass at the root, so run-shaped unions (e.g. the KV free
+    pool) come back out as run rows. Replaces the PR 2 static unroll of N
+    sequential bitmap-domain ORs; see ``benchmarks/kernel_bench.wide_ab``
+    for the tree-vs-fold speedup gate.
+    """
+    if not slabs:
+        return empty(capacity)
+    keys = _merge_keys_many([s.keys for s in slabs], capacity)
+    gathered = [_gather_raw(s, keys) for s in slabs]
+    data = jnp.stack([g[0] for g in gathered])
+    card = jnp.stack([g[1] for g in gathered])
+    kind = jnp.stack([g[2] for g in gathered])
+    data, card, kind = _tree_reduce_rows(data, card, kind, _or_rows_deferred)
+    card = _recount_bitmap_rows(data, card, kind)   # Alg. 4: recount once
+    return _finalize_rows(keys, data, card, kind)

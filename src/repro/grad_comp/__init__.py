@@ -1,7 +1,9 @@
 from .topk_roaring import (compress_leaf, decompress_leaf, compress_tree,
                            decompress_tree, compressed_crosspod_mean,
-                           compression_ratio, leaf_overlap, leaf_jaccard)
+                           compression_ratio, leaf_overlap, leaf_jaccard,
+                           leaf_overlap_many, leaf_topk_overlap)
 
 __all__ = ["compress_leaf", "decompress_leaf", "compress_tree",
            "decompress_tree", "compressed_crosspod_mean", "compression_ratio",
-           "leaf_overlap", "leaf_jaccard"]
+           "leaf_overlap", "leaf_jaccard", "leaf_overlap_many",
+           "leaf_topk_overlap"]

@@ -98,6 +98,32 @@ def leaf_jaccard(c1: CompressedLeaf, c2: CompressedLeaf) -> jax.Array:
     return jr.slab_jaccard(_leaf_slab(c1), _leaf_slab(c2))
 
 
+def leaf_overlap_many(c: CompressedLeaf, others) -> jax.Array:
+    """i32[N] of |idx(c) ∩ idx(o_i)| over many compressed leaves at once.
+
+    The support-stability scan (how much of this step's top-k survives in
+    each of N history steps / pod replicas), previously N sequential
+    ``leaf_overlap`` calls — now one stacked batched-meta dispatch launch
+    through the query engine, nothing decompressed or materialized.
+    Host-driven (like the stack construction itself): the stack capacity is
+    sized to the exact merged live-key count across the history leaves.
+    """
+    from repro import index
+    if not others:
+        return jnp.zeros((0,), jnp.int32)
+    slabs = [_leaf_slab(o) for o in others]
+    live = np.unique(np.concatenate([np.asarray(s.keys) for s in slabs]))
+    cap = max(1, int((live != int(jr.KEY_SENTINEL)).sum()))
+    stack = index.stack_from_slabs(slabs, capacity=cap)
+    return index.batched_and_card(stack, _leaf_slab(c))
+
+
+def leaf_topk_overlap(c: CompressedLeaf, others, k: int):
+    """Top-k of ``leaf_overlap_many`` — (scores i32[k], indices i32[k]):
+    which history steps' supports this leaf's top-k overlaps most."""
+    return jax.lax.top_k(leaf_overlap_many(c, others), k)
+
+
 def compression_ratio(c: CompressedLeaf, n: int) -> float:
     """Exact roaring-encoded bits vs dense f32 gradient bits.
 

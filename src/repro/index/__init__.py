@@ -1,0 +1,33 @@
+"""Batched sharded query engine for wide Boolean queries over Roaring slabs.
+
+Layers (bottom-up):
+
+  * ``stack`` — ``SlabStack``: N key-aligned slabs packed into stacked
+    arrays, aligned once so wide combines are pure leading-axis reductions;
+  * ``engine`` — Boolean expression trees (AND/OR/ANDNOT over leaves)
+    evaluated as log-depth kind-dispatching tree reductions with a single
+    deferred canonicalization, cardinality-only and top-k-by-cardinality
+    scoring through the batched-meta dispatch kernel, and ``shard_map``
+    sharding of the slab axis across a device mesh.
+
+Consumers: ``jax_roaring.union_many_slabs`` (the Algorithm 4 tree),
+``serve.kv_cache`` pool rebuilds, ``sparsity.masks`` pattern unions, and
+``grad_comp`` leaf-overlap scans.
+"""
+
+from repro.index.stack import SlabStack, stack_from_slabs
+from repro.index.engine import (Expr, Leaf, And, Or, AndNot, leaf, and_, or_,
+                                andnot, execute, execute_card, wide_union,
+                                wide_intersect, batched_and_card,
+                                batched_and_card_sharded, topk_by_card,
+                                topk_by_card_sharded, union_many_batched)
+
+__all__ = [
+    "SlabStack", "stack_from_slabs",
+    "Expr", "Leaf", "And", "Or", "AndNot",
+    "leaf", "and_", "or_", "andnot",
+    "execute", "execute_card", "wide_union", "wide_intersect",
+    "batched_and_card", "batched_and_card_sharded",
+    "topk_by_card", "topk_by_card_sharded",
+    "union_many_batched",
+]

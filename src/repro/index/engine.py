@@ -1,0 +1,312 @@
+"""The batched wide-query executor: Boolean expression trees over a SlabStack.
+
+The paper's headline wins are *horizontal*: Algorithm 4 unions many bitmaps
+at once, and the library-grade Roaring implementations (CRoaring's
+aggregation layer) earn their keep on exactly these wide AND/OR/ANDNOT
+queries. This module evaluates an expression tree whose leaves are rows of a
+key-aligned ``SlabStack``:
+
+  * every binary combine is one *row-state* step from the kind-dispatch
+    engine (``jax_roaring._and_rows`` / ``_or_rows`` / ``_andnot_rows``),
+    classifying each aligned container pair against the declarative registry
+    in ``kernels.roaring.dispatch`` — so run rows gallop/range-mask and
+    sparse array pairs merge packed at *every* tree level, not just the
+    leaves;
+  * n-ary AND/OR nodes reduce in log depth (``_tree_reduce_rows`` over the
+    stacked leaf axis when all children are leaves, balanced pairing
+    otherwise);
+  * canonicalization (best-of-three runOptimize) is deferred to a single
+    ``_finalize_rows`` at the root — an N-way query pays one pass, not N-1;
+  * cardinality-only evaluation (``execute_card``) skips materialization
+    entirely: per-level fused popcounts are the whole answer;
+  * ``batched_and_card`` / ``topk_by_card`` score *all* N stacked slabs
+    against one query in a single batched-meta dispatch launch
+    (``kernels.roaring.ops.intersect_dispatch_stacked``), and the
+    ``*_sharded`` variants ``shard_map`` the slab axis across a device mesh
+    (``launch/mesh.py``) with the query replicated.
+
+Everything is jit-/vmap-compatible; expression shapes are static Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jax_roaring as jr
+from repro.index.stack import SlabStack
+
+__all__ = [
+    "Expr", "Leaf", "And", "Or", "AndNot",
+    "leaf", "and_", "or_", "andnot",
+    "execute", "execute_card", "wide_union", "wide_intersect",
+    "batched_and_card", "batched_and_card_sharded",
+    "topk_by_card", "topk_by_card_sharded",
+    "union_many_batched",
+]
+
+
+# =============================================================================
+# expression trees
+# =============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Expr:
+    """Base class for wide Boolean query expressions (static structure)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf(Expr):
+    """Slab ``i`` of the stack."""
+
+    i: int
+
+
+@dataclasses.dataclass(frozen=True)
+class And(Expr):
+    """N-ary intersection of child expressions (log-depth reduction)."""
+
+    children: Tuple[Expr, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(Expr):
+    """N-ary union of child expressions (log-depth reduction)."""
+
+    children: Tuple[Expr, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class AndNot(Expr):
+    """Difference ``a \\ b``."""
+
+    a: Expr
+    b: Expr
+
+
+def leaf(i: int) -> Leaf:
+    """Leaf selecting slab ``i`` of the stack (bounds-checked against the
+    stack at evaluation time — jnp's silent index clamping must never turn
+    a bad leaf into a plausible wrong answer)."""
+    if int(i) < 0:
+        raise ValueError(f"leaf index must be >= 0, got {i}")
+    return Leaf(int(i))
+
+
+def and_(*children: Expr) -> Expr:
+    """N-ary AND node (``and_(x)`` collapses to ``x``; >= 1 child
+    required — fail at construction, not mid-evaluation)."""
+    if not children:
+        raise ValueError("and_() needs at least one child expression")
+    return children[0] if len(children) == 1 else And(tuple(children))
+
+
+def or_(*children: Expr) -> Expr:
+    """N-ary OR node (``or_(x)`` collapses to ``x``; >= 1 child
+    required — fail at construction, not mid-evaluation)."""
+    if not children:
+        raise ValueError("or_() needs at least one child expression")
+    return children[0] if len(children) == 1 else Or(tuple(children))
+
+
+def andnot(a: Expr, b: Expr) -> AndNot:
+    """Difference node ``a \\ b``."""
+    return AndNot(a, b)
+
+
+# =============================================================================
+# evaluation (row states: (data u16[C, 4096], card i32[C], kind i32[C]))
+# =============================================================================
+
+def _leaf_state(stack: SlabStack, i: int):
+    if not 0 <= i < stack.n_slabs:
+        raise IndexError(
+            f"leaf({i}) out of range for a stack of {stack.n_slabs} slabs")
+    return stack.data[i], stack.card[i], stack.kind[i]
+
+
+def _fold_states(states, combine):
+    """Balanced pairwise fold (log depth) over already-evaluated states."""
+    states = list(states)
+    while len(states) > 1:
+        nxt = []
+        for i in range(0, len(states) - 1, 2):
+            a, b = states[i], states[i + 1]
+            nxt.append(combine(a[0], a[1], a[2], b[0], b[1], b[2]))
+        if len(states) % 2:
+            nxt.append(states[-1])
+        states = nxt
+    return states[0]
+
+
+def _nary(stack: SlabStack, children, combine):
+    if all(isinstance(c, Leaf) for c in children):
+        # vectorized: slice the stacked leaf axis and tree-reduce flat —
+        # every level is ONE combine over (n/2)*C rows, not n/2 traced calls
+        for c in children:
+            if not 0 <= c.i < stack.n_slabs:
+                raise IndexError(f"leaf({c.i}) out of range for a stack of "
+                                 f"{stack.n_slabs} slabs")
+        idx = jnp.asarray([c.i for c in children], jnp.int32)
+        return jr._tree_reduce_rows(stack.data[idx], stack.card[idx],
+                                    stack.kind[idx], combine)
+    return _fold_states([_eval(stack, c) for c in children], combine)
+
+
+def _eval(stack: SlabStack, expr: Expr):
+    if isinstance(expr, Leaf):
+        return _leaf_state(stack, expr.i)
+    if isinstance(expr, And):
+        return _nary(stack, expr.children, jr._and_rows)
+    if isinstance(expr, Or):
+        return _nary(stack, expr.children, jr._or_rows)
+    if isinstance(expr, AndNot):
+        a = _eval(stack, expr.a)
+        b = _eval(stack, expr.b)
+        return jr._andnot_rows(a[0], a[1], a[2], b[0], b[1], b[2])
+    raise TypeError(f"not an Expr: {expr!r}")
+
+
+def execute(stack: SlabStack, expr: Expr) -> jr.RoaringSlab:
+    """Evaluate ``expr`` over the stack -> canonical RoaringSlab.
+
+    One deferred best-of-three canonicalization at the root; output is
+    bit-identical (values, card, kind, packed payload) to evaluating the
+    same expression with ``py_roaring`` set algebra.
+    """
+    data, card, kind = _eval(stack, expr)
+    return jr._finalize_rows(stack.keys[0], data, card, kind)
+
+
+def execute_card(stack: SlabStack, expr: Expr) -> jax.Array:
+    """|expr| without materializing a result slab — every combine level
+    already maintains exact per-row cardinalities (fused popcounts on the
+    bitmap-domain paths), so the root's counter sum is the answer."""
+    _, card, _ = _eval(stack, expr)
+    return jnp.sum(card)
+
+
+def wide_union(stack: SlabStack) -> jr.RoaringSlab:
+    """Union of all N stacked slabs (Algorithm 4): log-depth tree reduction,
+    kind-dispatching at every level, deferred cardinality (one recount at
+    the root), single deferred canonicalization."""
+    data, card, kind = jr._tree_reduce_rows(stack.data, stack.card,
+                                            stack.kind, jr._or_rows_deferred)
+    card = jr._recount_bitmap_rows(data, card, kind)
+    return jr._finalize_rows(stack.keys[0], data, card, kind)
+
+
+def wide_intersect(stack: SlabStack) -> jr.RoaringSlab:
+    """Intersection of all N stacked slabs: log-depth tree of registry
+    dispatch steps (arrays gallop, runs range-mask, bitmaps word-AND with
+    fused popcount), single deferred canonicalization."""
+    data, card, kind = jr._tree_reduce_rows(stack.data, stack.card,
+                                            stack.kind, jr._and_rows)
+    return jr._finalize_rows(stack.keys[0], data, card, kind)
+
+
+# =============================================================================
+# batched scoring: all N slabs against one query in one dispatch launch
+# =============================================================================
+
+def _align_query(stack: SlabStack, query: jr.RoaringSlab):
+    """Gather the query's rows aligned to the stack's key row."""
+    qd, qc, qk = jr._gather_raw(query, stack.keys[0])
+    return qd, qc, qk, jr._rows_nruns(qd, qk)
+
+
+def _stack_scores(data, card, kind, nruns, qd, qc, qk, qr):
+    """Per-slab |slab_n ∩ query| via the stacked batched-meta dispatch."""
+    from repro.kernels.roaring import ops as _kops
+    N, C = kind.shape
+    qdn = jnp.broadcast_to(qd, (N,) + qd.shape)
+    meta = jnp.stack([
+        kind, jnp.broadcast_to(qk, (N, C)),
+        card, jnp.broadcast_to(qc, (N, C)),
+        nruns, jnp.broadcast_to(qr, (N, C)),
+    ], axis=2).reshape(N, 6 * C).astype(jnp.int32)
+    _, rc = _kops.intersect_dispatch_stacked(data, qdn, meta)
+    return jnp.sum(rc, axis=1)
+
+
+def batched_and_card(stack: SlabStack, query: jr.RoaringSlab) -> jax.Array:
+    """i32[N] of |slab_n ∩ query| — the wide-query scoring primitive.
+
+    One ``intersect_dispatch_stacked`` launch covers all N*C container
+    pairs (run x run pairs score via the in-kernel coverage AND); nothing is
+    materialized or canonicalized.
+    """
+    qd, qc, qk, qr = _align_query(stack, query)
+    return _stack_scores(stack.data, stack.card, stack.kind, stack.nruns,
+                         qd, qc, qk, qr)
+
+
+def topk_by_card(stack: SlabStack, query: jr.RoaringSlab, k: int):
+    """Top-k stacked slabs by intersection cardinality with ``query``.
+
+    Returns ``(scores i32[k], indices i32[k])`` — ``jax.lax.top_k`` over the
+    batched scores (the "which posting lists match this query best"
+    primitive).
+    """
+    return jax.lax.top_k(batched_and_card(stack, query), k)
+
+
+# =============================================================================
+# sharding: slab axis across the device mesh, query replicated
+# =============================================================================
+
+def _shard_map():
+    try:                         # jax >= 0.4.35 exposes it at top level
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    return shard_map
+
+
+def batched_and_card_sharded(stack: SlabStack, query: jr.RoaringSlab,
+                             mesh, axis: str = "data") -> jax.Array:
+    """``batched_and_card`` with the slab axis sharded over ``mesh[axis]``.
+
+    Each device scores its N/axis_size shard of the stack against the
+    replicated query locally (one stacked dispatch launch per device, no
+    cross-device traffic until the caller reduces the i32[N] scores).
+    ``stack.n_slabs`` must divide evenly by the mesh axis size.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    qd, qc, qk, qr = _align_query(stack, query)
+    f = _shard_map()(
+        _stack_scores, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(), P(), P()),
+        out_specs=P(axis))
+    return f(stack.data, stack.card, stack.kind, stack.nruns, qd, qc, qk, qr)
+
+
+def topk_by_card_sharded(stack: SlabStack, query: jr.RoaringSlab, k: int,
+                         mesh, axis: str = "data"):
+    """Sharded ``topk_by_card``: local scoring per device shard, global
+    ``top_k`` over the gathered i32[N] scores (k*axis_size candidate traffic,
+    never slab payloads)."""
+    return jax.lax.top_k(
+        batched_and_card_sharded(stack, query, mesh, axis=axis), k)
+
+
+# =============================================================================
+# batched (vmapped) wide union — the mask-compiler consumer's shape
+# =============================================================================
+
+def union_many_batched(slabs: Sequence[jr.RoaringSlab],
+                       capacity: int) -> jr.RoaringSlab:
+    """N-way union vmapped over a leading batch axis.
+
+    ``slabs``: N same-capacity RoaringSlabs whose arrays carry a leading
+    batch axis ``[B, ...]`` (e.g. one slab per attention pattern, batched
+    over mask rows). Returns the batched union slab ``[B, ...]`` — the tree
+    reduction with its ``lax.cond`` laziness guards lowered to selects by
+    vmap (every pass runs batched; correct, and still log-depth).
+    """
+    return jax.vmap(
+        lambda *ss: jr.union_many_slabs(list(ss), capacity))(*slabs)

@@ -59,6 +59,18 @@ KIND_ARRAY = 1
 KIND_BITMAP = 2
 KIND_RUN = 3
 
+# The registry's public surface (consumed by jax_roaring, ref.py, kernel.py,
+# and the repro.index engine). Documented in docs/API.md; tests/test_docs.py
+# asserts the two stay in sync.
+__all__ = [
+    "ROW_WORDS", "ROW_SHAPE", "MAX_RUNS",
+    "KIND_EMPTY", "KIND_ARRAY", "KIND_BITMAP", "KIND_RUN",
+    "PairClass", "AND_TABLE", "class_predicate", "out_mask", "route_mask",
+    "union_route", "andnot_route",
+    "coverage_by_search", "coverage_by_scatter", "make_and_kernels",
+    "bind_args", "META_FIELDS", "unpack_meta",
+]
+
 
 @dataclasses.dataclass(frozen=True)
 class PairClass:

@@ -251,3 +251,24 @@ def intersect_dispatch_pallas(a_data: jax.Array, b_data: jax.Array,
         interpret=interpret,
     )(meta, a_data.reshape(C, *ROW_SHAPE), b_data.reshape(C, *ROW_SHAPE))
     return hits.reshape(C, ROW_WORDS), card
+
+
+def intersect_dispatch_stacked_pallas(a_data: jax.Array, b_data: jax.Array,
+                                      meta: jax.Array, interpret: bool = True):
+    """Batched-meta entry point for the dispatch kernel: a whole *slab stack*
+    in one fused launch.
+
+    a_data, b_data: u16[N, C, 4096] — N key-aligned slabs of C raw container
+    rows each (the ``repro.index.SlabStack`` layout). meta: i32[N, 6C], the
+    per-slab interleaved (kind_a, kind_b, card_a, card_b, nruns_a, nruns_b)
+    scalar-prefetch block. The stack flattens to a single ``N*C`` grid — one
+    kernel launch and one scalar-prefetch transfer for the whole wide query
+    instead of N separate dispatches (vmap of the per-slab entry would also
+    fuse, but this keeps the grid explicit and the meta contiguous for SMEM).
+    Returns (hits u16[N, C, 4096], card i32[N, C]).
+    """
+    N, C = a_data.shape[0], a_data.shape[1]
+    hits, card = intersect_dispatch_pallas(
+        a_data.reshape(N * C, ROW_WORDS), b_data.reshape(N * C, ROW_WORDS),
+        meta.reshape(-1), interpret=interpret)
+    return hits.reshape(N, C, ROW_WORDS), card.reshape(N, C)

@@ -63,3 +63,28 @@ def intersect_dispatch(a_data, b_data, meta,
         return _k.intersect_dispatch_pallas(a_data, b_data, meta,
                                             interpret=not _on_tpu())
     return _ref.intersect_dispatch_ref(a_data, b_data, meta)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def intersect_dispatch_stacked(a_data, b_data, meta,
+                               use_pallas: bool | None = None,
+                               interpret: bool = False):
+    """Stacked (batched-meta) kind-dispatch intersection: N key-aligned
+    slabs of C rows each in one launch — the ``repro.index`` wide-query
+    engine's inner kernel.
+
+    a_data, b_data: u16[N, C, 4096] raw container rows; meta: i32[N, 6C]
+    per-slab interleaved (kind, card, n_runs) x2. Returns
+    (hits u16[N, C, 4096], card i32[N, C]) with the same per-pair-class
+    semantics as ``intersect_dispatch``.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _k.intersect_dispatch_stacked_pallas(a_data, b_data, meta,
+                                                    interpret=not _on_tpu())
+    N, C = a_data.shape[0], a_data.shape[1]
+    hits, card = _ref.intersect_dispatch_ref(
+        a_data.reshape(N * C, a_data.shape[2]),
+        b_data.reshape(N * C, b_data.shape[2]), meta.reshape(-1))
+    return hits.reshape(N, C, a_data.shape[2]), card.reshape(N, C)

@@ -89,11 +89,62 @@ class RoaringPageTable:
         from repro.core import jax_roaring as jr
         return jr.from_roaring(self.free, self._page_capacity())
 
-    def used_slab(self):
-        """In-use pages as a device RoaringSlab (Alg. 4 union of per-seq
-        sets; contiguously-allocated sequences union into run rows)."""
+    def _seq_slab(self, pages):
+        """One page list as a device slab (empty list -> empty slab)."""
         from repro.core import jax_roaring as jr
-        return jr.from_roaring(self.used_bitmap(), self._page_capacity())
+        cap = self._page_capacity()
+        if not pages:
+            return jr.empty(cap)
+        return jr.from_dense_array(np.asarray(pages, np.int64), cap,
+                                   len(pages))
+
+    def _seq_slabs(self):
+        """Per-sequence page sets as device slabs (skips empty sequences)."""
+        return [self._seq_slab(p) for p in self.seq_pages.values() if p]
+
+    def used_slab(self):
+        """In-use pages as a device RoaringSlab — Alg. 4 as the query
+        engine's log-depth tree reduction over per-sequence page slabs
+        (kind-dispatching at every level, one deferred canonicalization);
+        contiguously-allocated sequences union into run rows."""
+        from repro.core import jax_roaring as jr
+        cap = self._page_capacity()
+        slabs = self._seq_slabs()
+        if not slabs:
+            return jr.empty(cap)
+        return jr.union_many_slabs(slabs, cap)
+
+    def rebuild_free_slab(self):
+        """Recompute the free pool from scratch on device: the wide query
+        ``all_pages ANDNOT (∪ per-seq pages)`` through the expression
+        executor — a one-launch cross-check (and disaster-recovery rebuild)
+        for the incrementally-maintained host ``free`` pool. Canonical
+        output: the fresh-pool case comes back as run rows."""
+        from repro import index
+        from repro.core import jax_roaring as jr
+        cap = self._page_capacity()
+        full = jr.from_ranges([(0, self.n_pages)], cap)
+        slabs = self._seq_slabs()
+        if not slabs:
+            return jr.slab_run_optimize(full)
+        stack = index.stack_from_slabs([full] + slabs, capacity=cap)
+        expr = index.andnot(
+            index.leaf(0),
+            index.or_(*[index.leaf(i + 1) for i in range(len(slabs))]))
+        return index.execute(stack, expr)
+
+    def shared_pages_many(self, seq_id: int, others: List[int]) -> np.ndarray:
+        """|pages(seq_id) ∩ pages(o)| for many candidate sequences in ONE
+        stacked dispatch launch (prefix-cache scan: which resident sequences
+        share the most physical pages with ``seq_id``)."""
+        from repro import index
+        if not others:
+            return np.zeros((0,), np.int32)
+        stack = index.stack_from_slabs(
+            [self._seq_slab(self.seq_pages.get(o, [])) for o in others],
+            capacity=self._page_capacity())
+        return np.asarray(index.batched_and_card(
+            stack, self._seq_slab(self.seq_pages.get(seq_id, []))))
 
     def shared_pages(self, seq_a: int, seq_b: int) -> int:
         """# physical pages two sequences share (prefix-cache diagnostics) via

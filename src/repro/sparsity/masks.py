@@ -84,11 +84,38 @@ class MaskBuilder:
     def union(self, other: "MaskBuilder") -> "MaskBuilder":
         return MaskBuilder([a | b for a, b in zip(self.rows, other.rows)])
 
-    def union_many(self, others: Sequence["MaskBuilder"]) -> "MaskBuilder":
-        """Alg. 4 heap union across many patterns, row-wise."""
+    def union_many(self, others: Sequence["MaskBuilder"],
+                   device: bool = True,
+                   capacity: Optional[int] = None) -> "MaskBuilder":
+        """Alg. 4 union across many patterns, row-wise.
+
+        Default routes through the batched query engine: every pattern's
+        rows become one batched slab (kind-preserving — window/causal/doc
+        rows stay run rows), the engine's log-depth tree reduction merges
+        all patterns vmapped over the row axis in one launch, and the result
+        bridges back kind-for-kind via ``jax_roaring.to_roaring``.
+        ``capacity`` (containers per row) is derived from the largest block
+        id present when not given. ``device=False`` keeps the host
+        heap-union reference path; the two are bit-identical (tested in
+        tests/test_wide_ops.py).
+        """
+        if not device or not others:
+            return MaskBuilder([
+                union_many([self.rows[i]] + [o.rows[i] for o in others])
+                for i in range(len(self.rows))])
+        import jax
+        from repro import index
+        from repro.core import jax_roaring as jr
+
+        if capacity is None:
+            capacity = 1 + max(
+                (r.keys[-1] for b in (self, *others) for r in b.rows
+                 if r.keys), default=0)
+        stacks = [rows_to_slabs(b.rows, capacity) for b in (self, *others)]
+        merged = index.union_many_batched(stacks, capacity=capacity)
         return MaskBuilder([
-            union_many([self.rows[i]] + [o.rows[i] for o in others])
-            for i in range(len(self.rows))])
+            jr.to_roaring(jax.tree.map(lambda x: x[r], merged))
+            for r in range(len(self.rows))])
 
     def intersect(self, other: "MaskBuilder") -> "MaskBuilder":
         return MaskBuilder([a & b for a, b in zip(self.rows, other.rows)])

@@ -1,0 +1,263 @@
+"""Wide horizontal ops: the tree reduction and the batched query engine.
+
+Covers the PR 3 checklist: union_many / tree-reduce over 3+ slabs with
+overlapping and disjoint keys, run-row inputs producing run-row outputs,
+bit-identity of the tree reduction vs sequential pairwise folds vs
+py_roaring, the expression executor (AND/OR/ANDNOT, card-only, top-k), the
+stacked batched-meta dispatch, sharding, and the three migrated consumers.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import index
+from repro.core import RoaringBitmap, union_many
+from repro.core import jax_roaring as jr
+from repro.core import py_roaring as pr
+
+_KIND_OF = {pr.ArrayContainer: jr.KIND_ARRAY,
+            pr.BitmapContainer: jr.KIND_BITMAP,
+            pr.RunContainer: jr.KIND_RUN}
+
+
+def _values(slab, max_out=1 << 17):
+    idx, valid = jr.to_indices(slab, max_out)
+    return np.asarray(idx)[np.asarray(valid)]
+
+
+def _rand_set(n, universe, seed):
+    r = np.random.default_rng(seed)
+    return np.unique(r.integers(0, universe, size=n))
+
+
+def _rand_ranges(seed, n_ranges, universe, max_len=500):
+    r = np.random.default_rng(seed)
+    starts = np.sort(r.integers(0, universe, n_ranges))
+    lens = r.integers(1, max_len, n_ranges)
+    return [(int(s), int(min(s + l, universe)))
+            for s, l in zip(starts, lens)]
+
+
+def _check_canonical(slab, oracle, tag=""):
+    """Values, card, kind, and packed payload must all match the oracle."""
+    np.testing.assert_array_equal(_values(slab), oracle.to_array(),
+                                  err_msg=tag)
+    assert int(slab.cardinality) == len(oracle), tag
+    keys = np.asarray(slab.keys)
+    kinds = np.asarray(slab.kind)
+    cards = np.asarray(slab.card)
+    assert list(keys[kinds != jr.KIND_EMPTY]) == list(oracle.keys), tag
+    rt = jr.to_roaring(slab)
+    for k, c, c2 in zip(oracle.keys, oracle.containers, rt.containers):
+        row = int(np.searchsorted(keys, k))
+        assert cards[row] == c.cardinality, (tag, k)
+        assert kinds[row] == _KIND_OF[type(c)], (tag, k, int(kinds[row]))
+        # packed payload bytes, via the kind-preserving reverse bridge
+        if isinstance(c, pr.ArrayContainer):
+            np.testing.assert_array_equal(c2.arr, c.arr, err_msg=tag)
+        elif isinstance(c, pr.BitmapContainer):
+            np.testing.assert_array_equal(c2.words, c.words, err_msg=tag)
+        else:
+            np.testing.assert_array_equal(c2.starts, c.starts, err_msg=tag)
+            np.testing.assert_array_equal(c2.lengths, c.lengths, err_msg=tag)
+
+
+# --------------------------------------------------------------- tree union
+def test_tree_union_overlapping_keys():
+    sets = [_rand_set(4000, 1 << 18, 100 + i) for i in range(5)]
+    rbs = [RoaringBitmap.from_sorted_unique(s) for s in sets]
+    slabs = [jr.from_dense_array(s, 8, 1 << 15) for s in sets]
+    got = jr.union_many_slabs(slabs, capacity=8)
+    _check_canonical(got, union_many(rbs), "overlapping")
+
+
+def test_tree_union_disjoint_keys():
+    # each slab occupies its own chunk: the merged key set is the concat
+    sets = [np.arange(i << 16, (i << 16) + 300 + 37 * i) for i in range(4)]
+    rbs = [RoaringBitmap.from_sorted_unique(s) for s in sets]
+    slabs = [jr.from_dense_array(s, 2, 1 << 12) for s in sets]
+    got = jr.union_many_slabs(slabs, capacity=8)
+    _check_canonical(got, union_many(rbs), "disjoint")
+
+
+@pytest.mark.parametrize("n_slabs", [3, 5, 8])
+def test_tree_union_matches_pairwise_fold_and_oracle(n_slabs):
+    """Tree reduction == sequential slab_or fold == py_roaring, including
+    kinds and packed payloads (the deferred canonicalization must land
+    exactly where per-step canonicalization does)."""
+    sets = [_rand_set(2000 + 700 * i, 1 << 18, 200 + i)
+            for i in range(n_slabs)]
+    rbs = [RoaringBitmap.from_sorted_unique(s) for s in sets]
+    slabs = [jr.from_dense_array(s, 8, 1 << 15) for s in sets]
+    tree = jr.union_many_slabs(slabs, capacity=8)
+    fold = slabs[0]
+    for s in slabs[1:]:
+        fold = jr.slab_or(fold, s, capacity=8)
+    oracle = union_many(rbs)
+    _check_canonical(tree, oracle, f"tree n={n_slabs}")
+    _check_canonical(fold, oracle, f"fold n={n_slabs}")
+
+
+def test_tree_union_run_rows_in_run_rows_out():
+    """Run-row inputs union into run-row outputs: the root canonicalization
+    re-detects run shape even though intermediates are word rows."""
+    rsets = [RoaringBitmap.from_ranges(_rand_ranges(60 + i, 25, 1 << 18))
+             for i in range(4)]
+    slabs = [jr.from_roaring(x, 16) for x in rsets]
+    for s in slabs:
+        assert (np.asarray(s.kind) == jr.KIND_RUN).any()
+    got = jr.union_many_slabs(slabs, capacity=16)
+    _check_canonical(got, union_many(rsets), "runs")
+    assert (np.asarray(got.kind) == jr.KIND_RUN).any()
+
+
+def test_tree_union_empty_and_single():
+    assert int(jr.union_many_slabs([], capacity=4).cardinality) == 0
+    s = jr.from_dense_array(np.arange(0, 50000, 2), 4, 1 << 16)
+    got = jr.union_many_slabs([s], capacity=4)
+    _check_canonical(got, RoaringBitmap.from_sorted_unique(
+        np.arange(0, 50000, 2)), "single")
+
+
+# ------------------------------------------------------------ query engine
+def _mixed_stack(seed=0, n=6, cap=8):
+    rng = np.random.default_rng(seed)
+    sets, slabs = [], []
+    for i in range(n):
+        if i % 3 == 2:                      # every third operand run-shaped
+            rb = RoaringBitmap.from_ranges(
+                _rand_ranges(seed + i, 20, 1 << 18))
+            sets.append(rb)
+            slabs.append(jr.from_roaring(rb, cap))
+        else:
+            s = np.unique(rng.integers(0, 1 << 18, 3000 + 500 * i))
+            sets.append(RoaringBitmap.from_sorted_unique(s))
+            slabs.append(jr.from_dense_array(s, cap, 1 << 15))
+    return sets, slabs, index.stack_from_slabs(slabs, capacity=cap)
+
+
+def test_engine_wide_union_intersect():
+    rbs, _, stack = _mixed_stack()
+    _check_canonical(index.wide_union(stack), union_many(rbs), "wide_union")
+    want = rbs[0]
+    for r in rbs[1:]:
+        want = want & r
+    _check_canonical(index.wide_intersect(stack), want, "wide_intersect")
+
+
+def test_engine_expression_tree():
+    rbs, _, stack = _mixed_stack(seed=7)
+    expr = index.andnot(
+        index.and_(index.or_(index.leaf(0), index.leaf(2), index.leaf(4)),
+                   index.leaf(1)),
+        index.leaf(3))
+    want = ((rbs[0] | rbs[2] | rbs[4]) & rbs[1]).andnot(rbs[3])
+    _check_canonical(index.execute(stack, expr), want, "expr")
+    assert int(index.execute_card(stack, expr)) == len(want)
+
+
+def test_engine_is_jittable():
+    _, _, stack = _mixed_stack(seed=9, n=4)
+    expr = index.and_(index.or_(index.leaf(0), index.leaf(1)), index.leaf(2))
+    f = jax.jit(lambda st: index.execute_card(st, expr))
+    g = lambda st: index.execute_card(st, expr)
+    assert int(f(stack)) == int(g(stack))
+
+
+def test_engine_batched_scores_and_topk():
+    rbs, slabs, stack = _mixed_stack(seed=3)
+    q = slabs[4]
+    scores = np.asarray(index.batched_and_card(stack, q))
+    want = [len(r & rbs[4]) for r in rbs]
+    assert scores.tolist() == want
+    v, i = index.topk_by_card(stack, q, 3)
+    assert int(i[0]) == 4 and int(v[0]) == want[4]
+
+
+def test_engine_sharded_scores():
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (run under dryrun env)")
+    from repro.launch.mesh import make_test_mesh
+    rbs, slabs, stack = _mixed_stack(seed=5, n=8)
+    mesh = make_test_mesh(2, 1) if jax.device_count() < 4 else \
+        make_test_mesh(2, 2)
+    got = np.asarray(index.batched_and_card_sharded(
+        stack, slabs[1], mesh, axis="data"))
+    want = [len(r & rbs[1]) for r in rbs]
+    assert got.tolist() == want
+
+
+# --------------------------------------------------------------- consumers
+def test_kv_cache_rebuild_free_slab_matches_host_pool():
+    from repro.serve.kv_cache import RoaringPageTable
+    pt = RoaringPageTable(n_pages=50_000, page_size=4)
+    pt.alloc(1, 4000)
+    pt.alloc(2, 800)
+    pt.alloc(3, 12)
+    pt.release(2)
+    rebuilt = pt.rebuild_free_slab()
+    host = pt.free_slab()           # kind-preserving bridge of the host pool
+    _check_canonical(rebuilt, pt.free, "rebuild_free")
+    np.testing.assert_array_equal(np.asarray(rebuilt.kind),
+                                  np.asarray(host.kind))
+    np.testing.assert_array_equal(np.asarray(rebuilt.data),
+                                  np.asarray(host.data))
+    # engine wide-union path for the used pool, canonical vs host Alg. 4
+    _check_canonical(pt.used_slab(), pt.used_bitmap(), "used_slab")
+
+
+def test_kv_cache_shared_pages_many():
+    from repro.serve.kv_cache import RoaringPageTable
+    pt = RoaringPageTable(n_pages=10_000, page_size=4)
+    pt.alloc(1, 400)
+    pt.alloc(2, 200)
+    pt.alloc(3, 100)
+    got = pt.shared_pages_many(1, [1, 2, 3, 99])
+    want = [pt.shared_pages(1, s) for s in (1, 2, 3, 99)]
+    assert got.tolist() == want
+
+
+def test_mask_union_many_device_matches_host():
+    from repro.sparsity.masks import MaskBuilder, local_window_mask
+    nb = 8
+    pats = [MaskBuilder(local_window_mask(nb, w)) for w in (1, 2, 4)]
+    dev = pats[0].union_many(pats[1:])
+    host = pats[0].union_many(pats[1:], device=False)
+    for r in range(nb):
+        np.testing.assert_array_equal(dev.rows[r].to_array(),
+                                      host.rows[r].to_array())
+        assert [type(c) for c in dev.rows[r].containers] == \
+               [type(c) for c in host.rows[r].containers], r
+
+
+def test_grad_comp_leaf_overlap_many_matches_sequential():
+    from repro.grad_comp import (compress_leaf, leaf_overlap,
+                                 leaf_overlap_many, leaf_topk_overlap)
+    rng = np.random.default_rng(4)
+    c0 = compress_leaf(jnp.asarray(rng.normal(size=8192), jnp.float32), 512)
+    cs = [compress_leaf(jnp.asarray(rng.normal(size=8192), jnp.float32), 512)
+          for _ in range(5)]
+    many = np.asarray(leaf_overlap_many(c0, cs))
+    seq = [int(leaf_overlap(c0, c)) for c in cs]
+    assert many.tolist() == seq
+    v, i = leaf_topk_overlap(c0, cs, 2)
+    assert int(v[0]) == max(seq) and seq[int(i[0])] == max(seq)
+
+
+# ------------------------------------------------------ reverse bridge unit
+def test_to_roaring_round_trip_all_kinds():
+    rb = RoaringBitmap.from_ranges([(0, 70000)])              # run rows
+    rb.ior(RoaringBitmap.from_sorted_unique(
+        (4 << 16) + _rand_set(200, 1 << 16, 0)))              # array row
+    rb.ior(RoaringBitmap.from_sorted_unique(
+        (5 << 16) + _rand_set(30000, 1 << 16, 1)))            # bitmap row
+    slab = jr.from_roaring(rb, 8)
+    back = jr.to_roaring(slab)
+    assert back.keys == rb.keys
+    np.testing.assert_array_equal(back.to_array(), rb.to_array())
+    for c1, c2 in zip(back.containers, rb.containers):
+        assert type(c1) is type(c2)
+    assert back.size_in_bytes() == rb.size_in_bytes()
