@@ -49,9 +49,9 @@ def dispatch_ab(quick: bool = False):
     for name, (na, nb, universe) in workloads.items():
         sa = _rand_slab(jr, rng, na, universe, C)
         sb = _rand_slab(jr, rng, nb, universe, C)
-        f_new = jax.jit(lambda x, y: jr.slab_and(x, y, capacity=C))
-        f_old = jax.jit(lambda x, y: jr.slab_and_bitmap_domain(x, y, capacity=C))
-        f_card = jax.jit(jr.slab_and_card)
+        f_new = jax.jit(lambda x, y: jr._slab_and(x, y, capacity=C))
+        f_old = jax.jit(lambda x, y: jr._slab_and_bitmap_domain(x, y, capacity=C))
+        f_card = jax.jit(jr._slab_and_card)
         us_new = _t(lambda: f_new(sa, sb), repeats)
         us_old = _t(lambda: f_old(sa, sb), repeats)
         us_card = _t(lambda: f_card(sa, sb), repeats)
@@ -95,9 +95,9 @@ def run_ab(quick: bool = False):
     sb = jr.from_roaring(rb, C)
     sc = jr.from_dense_array(vs, C, 1 << 18)
     workloads = {"run_run": (sa, sb), "run_bitmap": (sa, sc)}
-    f_new = jax.jit(lambda x, y: jr.slab_and(x, y, capacity=C))
-    f_old = jax.jit(lambda x, y: jr.slab_and_bitmap_domain(x, y, capacity=C))
-    f_card = jax.jit(jr.slab_and_card)
+    f_new = jax.jit(lambda x, y: jr._slab_and(x, y, capacity=C))
+    f_old = jax.jit(lambda x, y: jr._slab_and_bitmap_domain(x, y, capacity=C))
+    f_card = jax.jit(jr._slab_and_card)
     for name, (x, y) in workloads.items():
         assert int(f_new(x, y).cardinality) == int(f_old(x, y).cardinality)
         us_new = _t(lambda: f_new(x, y), repeats)
@@ -158,7 +158,7 @@ def wide_ab(quick: bool = False):
             acc = op(acc, s, capacity=C)
         return acc
 
-    f_fold = jax.jit(_ft.partial(fold, jr.slab_or))
+    f_fold = jax.jit(_ft.partial(fold, jr._slab_or))
     assert int(f_tree(*slabs).cardinality) == int(f_fold(*slabs).cardinality)
     us_tree = _t(lambda: f_tree(*slabs), repeats)
     us_fold = _t(lambda: f_fold(*slabs), repeats)
@@ -172,15 +172,16 @@ def wide_ab(quick: bool = False):
     # rows. With independent random operands the fold degenerates (the first
     # AND empties the intermediate and the remaining N-2 steps are no-ops),
     # which benchmarks nothing.
+    from repro import roaring
     base = np.unique(rng.integers(0, C << 16, 60_000))
     and_slabs = []
     for i in range(N):
         keep = rng.random(base.size) > 0.03
         and_slabs.append(jr.from_dense_array(base[keep], C, 1 << 17))
-    stack = index.stack_from_slabs(and_slabs, capacity=C)
+    stack = roaring.stack(and_slabs, capacity=C)
     f_wand = jax.jit(index.wide_intersect)
-    f_fand = jax.jit(_ft.partial(fold, jr.slab_and))
-    assert int(f_wand(stack).cardinality) == \
+    f_fand = jax.jit(_ft.partial(fold, jr._slab_and))
+    assert int(f_wand(stack).card()) == \
         int(f_fand(*and_slabs).cardinality)
     us_wand = _t(lambda: f_wand(stack), repeats)
     us_fand = _t(lambda: f_fand(*and_slabs), repeats)
@@ -194,6 +195,70 @@ def wide_ab(quick: bool = False):
     us_score = _t(lambda: f_score(stack, q), repeats)
     rows.append((f"wide/score_n{N}/batched_card", round(us_score, 1),
                  round(us_fand / max(us_score, 1e-9), 2)))
+    return rows
+
+
+def api_ab(quick: bool = False):
+    """A/B: the ``repro.roaring`` object API vs the raw row-state path.
+
+    ``RoaringSlab.__and__`` / ``.and_card`` wrap the exact same engine
+    entry points the free functions call, plus the nruns-leaf refresh — the
+    object layer must be (essentially) free under jit. The derived column is
+    raw/object; ``benchmarks/compare.py`` gates it at >= 0.9x.
+    """
+    import jax
+    from repro import roaring
+    from repro.core import jax_roaring as jr
+
+    rows = []
+    rng = np.random.default_rng(13)
+    C = 32
+    repeats = 3 if quick else 5
+    # 32 chunks, arrays (~600/chunk) vs mixed arrays/bitmaps (~7.5k/chunk):
+    # big enough that both jitted programs run for milliseconds, so the
+    # parity ratio measures the programs and not the timer
+    va = np.unique(rng.integers(0, C << 16, 20000))
+    vb = np.unique(rng.integers(0, C << 16, 250000))
+    a_obj = roaring.RoaringSlab.from_values(va, C, 1 << 18)
+    b_obj = roaring.RoaringSlab.from_values(vb, C, 1 << 18)
+    a_raw = jr.from_dense_array(va, C, 1 << 18)
+    b_raw = jr.from_dense_array(vb, C, 1 << 18)
+
+    f_obj = jax.jit(lambda x, y: x.and_(y, capacity=C))
+    f_raw = jax.jit(lambda x, y: jr._slab_and(x, y, capacity=C))
+    assert int(f_obj(a_obj, b_obj).card()) == \
+        int(f_raw(a_raw, b_raw).cardinality)
+    f_objc = jax.jit(lambda x, y: x.and_card(y))
+    f_rawc = jax.jit(jr._slab_and_card)
+
+    # the two paths compile to the same computation (the object layer is a
+    # trace-time veneer), so any measured delta is timer noise — which on a
+    # shared CPU runner is easily +-10%. Each trial measures the two paths
+    # back to back (alternating order to kill drift/thermal bias) and
+    # contributes one raw/object ratio; the derived column is the MEDIAN of
+    # the per-trial ratios, so a transient stall in any single measurement
+    # cannot fake an overhead or a win.
+    us_raw, us_obj, us_rawc, us_objc = [], [], [], []
+    card_reps = 10 * repeats                 # fast op: drown the timer
+    for trial in range(7):
+        pairs = [(us_raw, lambda: f_raw(a_raw, b_raw), repeats),
+                 (us_obj, lambda: f_obj(a_obj, b_obj), repeats),
+                 (us_rawc, lambda: f_rawc(a_raw, b_raw), card_reps),
+                 (us_objc, lambda: f_objc(a_obj, b_obj), card_reps)]
+        if trial % 2:                        # kill ordering/thermal bias
+            pairs.reverse()
+        for acc, fn, reps in pairs:
+            acc.append(_t(fn, reps))
+
+    def med_ratio(raw, obj):
+        return float(np.median(np.asarray(raw) / np.asarray(obj)))
+
+    rows.append(("api/and/raw_rowstate", round(min(us_raw), 1), ""))
+    rows.append(("api/and/object", round(min(us_obj), 1),
+                 round(med_ratio(us_raw, us_obj), 2)))
+    rows.append(("api/card/raw_rowstate", round(min(us_rawc), 1), ""))
+    rows.append(("api/card/object", round(min(us_objc), 1),
+                 round(med_ratio(us_rawc, us_objc), 2)))
     return rows
 
 
@@ -215,7 +280,7 @@ def run(quick: bool = False):
                      round(C * 8192 / max(us, 1e-9), 1)))  # bytes/us
 
     # slab set ops end to end
-    from repro.core.jax_roaring import from_dense_array, slab_and
+    from repro.core.jax_roaring import from_dense_array, _slab_and as slab_and
     va = np.unique(rng.integers(0, 1 << 19, 30000))
     vb = np.unique(rng.integers(0, 1 << 19, 30000))
     sa = from_dense_array(va, 16, 1 << 15)
@@ -232,6 +297,9 @@ def run(quick: bool = False):
 
     # wide horizontal ops: tree reduction vs sequential pairwise fold
     rows.extend(wide_ab(quick=quick))
+
+    # object-API overhead: repro.roaring vs the raw row-state path
+    rows.extend(api_ab(quick=quick))
 
     # sparse attention ref vs flash ref at 2k
     from repro.models import attention as A

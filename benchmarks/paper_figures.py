@@ -208,8 +208,8 @@ def dispatch_ab_sweep(repeats: int = 3, n: int = 10_000) -> list:
         cap = max(1, int(np.ceil(n / d / (1 << 16))) + 1)
         sa = jr.from_dense_array(va, cap, 1 << 16)
         sb = jr.from_dense_array(vb, cap, 1 << 16)
-        f_new = jax.jit(lambda x, y: jr.slab_and(x, y))
-        f_old = jax.jit(lambda x, y: jr.slab_and_bitmap_domain(x, y))
+        f_new = jax.jit(lambda x, y: jr._slab_and(x, y))
+        f_old = jax.jit(lambda x, y: jr._slab_and_bitmap_domain(x, y))
         us_new = _time_us(lambda: jax.block_until_ready(f_new(sa, sb)), repeats)
         us_old = _time_us(lambda: jax.block_until_ready(f_old(sa, sb)), repeats)
         want = len(RoaringBitmap.from_sorted_unique(va)

@@ -51,7 +51,7 @@ def main():
         kept_min = np.abs(flat[kept]).min() if kept.size else 0.0
         assert dropped_max <= kept_min + 1e-7
         r = compression_ratio(c, g.size)
-        kinds = np.asarray(c.slab_kind)
+        kinds = np.asarray(c.slab.kinds)
         total_dense += g.size * 4
         total_comp += r * g.size * 4
         print(f"{name:40s} {g.size:>10d} {k:>8d} {r:>8.3f} "

@@ -1,6 +1,6 @@
 """Quickstart: the Roaring bitmap core, the paper's claims in 60 seconds —
-plus the device slab (run containers, runOptimize, exact sizing) and the
-batched wide-query engine.
+plus the ``repro.roaring`` object API (pytree-native slabs with operator
+algebra, portable serialization) and the wide-query engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -53,32 +53,54 @@ def main():
     # --- rank/select ---------------------------------------------------------------
     print(f"rank(500000) = {ra.rank(500_000)}, select(1000) = {ra.select(1000)}")
 
-    # --- the device slab (PR 2 API): run rows, runOptimize, exact sizing ------------
-    from repro.core import jax_roaring as jr
+    # --- the device slab (PR 5 object API): pytree-native, operator algebra --------
+    import jax
 
-    dense = jr.from_dense_array(np.arange(0, 40_000), capacity=4,
-                                max_elems=1 << 16)
-    opt = jr.slab_run_optimize(dense)            # best-of-three, on device
-    runs = jr.from_ranges([(0, 40_000)], capacity=4)   # run rows directly
+    from repro import roaring
+    from repro.roaring import RoaringSlab
+
+    da = RoaringSlab.from_values(a, capacity=16, max_elems=1 << 17)
+    db = RoaringSlab.from_values(b, capacity=16, max_elems=1 << 17)
+    inter = da & db                              # kind-dispatch engine, canonical
+    assert int(inter.card()) == len(sa & sb)
+    runs = RoaringSlab.from_ranges([(0, 40_000)], capacity=4)  # run rows directly
+    dense = RoaringSlab.from_values(np.arange(0, 40_000), capacity=4,
+                                    max_elems=1 << 16)
+    opt = dense.run_optimize()                   # best-of-three, on device
     print(f"\nslab [0, 40000): {int(dense.size_in_bytes())} B as "
           f"array/bitmap rows -> {int(opt.size_in_bytes())} B after "
-          f"runOptimize (== from_ranges: {int(runs.size_in_bytes())} B)")
-    hits = jr.contains(opt, np.asarray([39_999, 40_000]))
+          f".run_optimize() (== from_ranges: {int(runs.size_in_bytes())} B)")
+    hits = opt.contains(np.asarray([39_999, 40_000]))
     assert bool(hits[0]) and not bool(hits[1])
+
+    # portable serialization (the Roaring interchange format)
+    blob = inter.serialize()
+    back = RoaringSlab.deserialize(blob)
+    assert back.serialize() == blob
+    print(f"serialize round trip: {len(blob)} bytes, kind-exact")
+
+    # jit / vmap flow: a RoaringSlab is a pytree (capacity is static aux)
+    f = jax.jit(lambda x, y: (x & y).card())
+    assert int(f(da, db)) == len(sa & sb)
 
     # --- the wide-query engine: Algorithm 4 at query-engine scale -------------------
     from repro import index
 
-    posting = [jr.from_dense_array(
+    posting = [RoaringSlab.from_values(
         np.unique(rng.integers(0, 1 << 18, 4_000)), 8, 1 << 14)
         for _ in range(8)]
-    stack = index.stack_from_slabs(posting, capacity=8)
+    stack = roaring.stack(posting, capacity=8)   # stacked slab: ndim == 2
     u = index.wide_union(stack)                  # log-depth tree reduction
     expr = index.andnot(index.or_(index.leaf(0), index.leaf(1)),
                         index.leaf(2))
     n = int(index.execute_card(stack, expr))     # no result materialized
+    # ... or attach slabs to the tree directly — no stack bookkeeping
+    n2 = int(index.execute_card(index.andnot(
+        index.or_(index.leaf(posting[0]), index.leaf(posting[1])),
+        index.leaf(posting[2]))))
+    assert n == n2
     scores, ids = index.topk_by_card(stack, posting[0], k=3)
-    print(f"wide union of 8 slabs: |∪| = {int(u.cardinality)}; "
+    print(f"wide union of 8 slabs: |∪| = {int(u.card())}; "
           f"|(0 ∪ 1) \\ 2| = {n}; top-3 vs slab 0 = "
           f"{np.asarray(ids).tolist()} (scores {np.asarray(scores).tolist()})")
 

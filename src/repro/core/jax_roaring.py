@@ -41,6 +41,7 @@ time; capacities are static Python ints.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -1193,12 +1194,12 @@ def slab_and_card(a: RoaringSlab, b: RoaringSlab) -> jax.Array:
 
 def slab_or_card(a: RoaringSlab, b: RoaringSlab) -> jax.Array:
     """|A ∪ B| via inclusion-exclusion on the per-container counters."""
-    return a.cardinality + b.cardinality - slab_and_card(a, b)
+    return a.cardinality + b.cardinality - _slab_and_card(a, b)
 
 
 def slab_jaccard(a: RoaringSlab, b: RoaringSlab) -> jax.Array:
     """|A ∩ B| / |A ∪ B| in one dispatch pass (0 when both empty)."""
-    inter = slab_and_card(a, b)
+    inter = _slab_and_card(a, b)
     union = a.cardinality + b.cardinality - inter
     return jnp.where(union > 0, inter / jnp.maximum(union, 1), 0.0)
 
@@ -1219,8 +1220,8 @@ def slab_and_many(query: RoaringSlab, slabs: list[RoaringSlab],
     laziness per slab — prefer it for large fleets of array-dominated slabs.
     """
     if unroll:
-        return stack_slabs([slab_and(query, s) for s in slabs])
-    return jax.vmap(lambda s: slab_and(query, s))(stack_slabs(slabs))
+        return stack_slabs([_slab_and(query, s) for s in slabs])
+    return jax.vmap(lambda s: _slab_and(query, s))(stack_slabs(slabs))
 
 
 def slab_and_card_many(query: RoaringSlab,
@@ -1229,7 +1230,7 @@ def slab_and_card_many(query: RoaringSlab,
     (score many posting lists against one query without materializing).
     Cond-free, so vmap costs nothing extra."""
     stacked = stack_slabs(slabs)
-    return jax.vmap(lambda s: slab_and_card(query, s))(stacked)
+    return jax.vmap(lambda s: _slab_and_card(query, s))(stacked)
 
 
 def _lift_rows(data, card, kind):
@@ -1406,3 +1407,54 @@ def union_many_slabs(slabs: list[RoaringSlab], capacity: int) -> RoaringSlab:
     data, card, kind = _tree_reduce_rows(data, card, kind, _or_rows_deferred)
     card = _recount_bitmap_rows(data, card, kind)   # Alg. 4: recount once
     return _finalize_rows(keys, data, card, kind)
+
+
+# =============================================================================
+# deprecation shims: the tuple-threading slab_* free functions are superseded
+# by the repro.roaring object API. Each public slab_* name below is rebound to
+# a shim that warns (DeprecationWarning, caller-attributed) and delegates; the
+# original implementation stays reachable as _slab_<name> — the internal layer
+# repro.roaring and this module's own helpers call. Warning cost is trace-time
+# only: jitted callers never re-enter the shim.
+# =============================================================================
+
+_DEPRECATED = {
+    "slab_and": "a & b (repro.roaring.RoaringSlab)",
+    "slab_or": "a | b (repro.roaring.RoaringSlab)",
+    "slab_xor": "a ^ b (repro.roaring.RoaringSlab)",
+    "slab_andnot": "a - b (repro.roaring.RoaringSlab)",
+    "slab_and_card": "a.and_card(b) (repro.roaring.RoaringSlab)",
+    "slab_or_card": "a.or_card(b) (repro.roaring.RoaringSlab)",
+    "slab_jaccard": "a.jaccard(b) (repro.roaring.RoaringSlab)",
+    "slab_select": "a.select(j) (repro.roaring.RoaringSlab)",
+    "slab_run_optimize": "a.run_optimize() (repro.roaring.RoaringSlab)",
+    "slab_and_many": "stacked & query (repro.roaring, batched broadcast)",
+    "slab_and_card_many": "stacked.and_card(query) (repro.roaring)",
+    "slab_and_bitmap_domain":
+        "repro.roaring set algebra (this A/B baseline stays for benchmarks)",
+    "slab_or_bitmap_domain":
+        "repro.roaring set algebra (this A/B baseline stays for benchmarks)",
+}
+
+
+def _install_deprecation_shims() -> None:
+    g = globals()
+    for name, repl in _DEPRECATED.items():
+        impl = g[name]
+        g["_" + name] = impl
+
+        def _make(impl=impl, name=name, repl=repl):
+            @functools.wraps(impl)
+            def shim(*args, **kwargs):
+                warnings.warn(
+                    f"repro.core.jax_roaring.{name} is deprecated; "
+                    f"use {repl}", DeprecationWarning, stacklevel=2)
+                return impl(*args, **kwargs)
+
+            shim.__wrapped__ = impl
+            return shim
+
+        g[name] = _make()
+
+
+_install_deprecation_shims()

@@ -27,14 +27,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import roaring
 from repro.core import jax_roaring as jr
+from repro.roaring import RoaringSlab
 
 
 class CompressedLeaf(NamedTuple):
-    slab_keys: jax.Array    # i32[C]
-    slab_card: jax.Array    # i32[C]
-    slab_kind: jax.Array    # i32[C]
-    slab_data: jax.Array    # u16[C, 4096]
+    """Compressed gradient leaf: the index set as a pytree ``RoaringSlab``
+    (flows through all_gather / tree_map natively) + packed values."""
+
+    slab: RoaringSlab       # index set (keys/kinds/cards/nruns/payload)
     values: jax.Array       # f32[k] (aligned with ascending index order)
 
 
@@ -52,14 +54,13 @@ def compress_leaf(g: jax.Array, k: int) -> CompressedLeaf:
     idx = jnp.sort(idx)                              # ascending (roaring order)
     vals = flat[idx]
     cap = _capacity_for(n, k)
-    slab = jr.from_indices(idx, jnp.ones((k,), bool), cap)
-    return CompressedLeaf(slab.keys, slab.card, slab.kind, slab.data, vals)
+    slab = RoaringSlab.from_indices(idx, jnp.ones((k,), bool), cap)
+    return CompressedLeaf(slab, vals)
 
 
 def decompress_leaf(c: CompressedLeaf, shape, dtype) -> jax.Array:
     """Scatter values back to a dense leaf."""
-    slab = jr.RoaringSlab(c.slab_keys, c.slab_card, c.slab_kind, c.slab_data)
-    idx, valid = jr.to_indices(slab, c.values.shape[0])
+    idx, valid = c.slab.to_indices(c.values.shape[0])
     n = int(np.prod(shape))
     out = jnp.zeros((n,), jnp.float32).at[jnp.where(valid, idx, n)].add(
         c.values * valid.astype(jnp.float32), mode="drop")
@@ -80,22 +81,18 @@ def decompress_tree(compressed, like):
         is_leaf=lambda x: isinstance(x, CompressedLeaf))
 
 
-def _leaf_slab(c: CompressedLeaf) -> "jr.RoaringSlab":
-    return jr.RoaringSlab(c.slab_keys, c.slab_card, c.slab_kind, c.slab_data)
-
-
 def leaf_overlap(c1: CompressedLeaf, c2: CompressedLeaf) -> jax.Array:
     """|idx(c1) ∩ idx(c2)| via the cardinality-only dispatch fast path.
 
     The top-k *support stability* between consecutive steps — the quantity
     error-feedback schedules key off — computed without decompressing either
     leaf or materializing the intersection."""
-    return jr.slab_and_card(_leaf_slab(c1), _leaf_slab(c2))
+    return c1.slab.and_card(c2.slab)
 
 
 def leaf_jaccard(c1: CompressedLeaf, c2: CompressedLeaf) -> jax.Array:
     """Jaccard similarity of two compressed index sets (one dispatch pass)."""
-    return jr.slab_jaccard(_leaf_slab(c1), _leaf_slab(c2))
+    return c1.slab.jaccard(c2.slab)
 
 
 def leaf_overlap_many(c: CompressedLeaf, others) -> jax.Array:
@@ -111,11 +108,11 @@ def leaf_overlap_many(c: CompressedLeaf, others) -> jax.Array:
     from repro import index
     if not others:
         return jnp.zeros((0,), jnp.int32)
-    slabs = [_leaf_slab(o) for o in others]
+    slabs = [o.slab for o in others]
     live = np.unique(np.concatenate([np.asarray(s.keys) for s in slabs]))
     cap = max(1, int((live != int(jr.KEY_SENTINEL)).sum()))
-    stack = index.stack_from_slabs(slabs, capacity=cap)
-    return index.batched_and_card(stack, _leaf_slab(c))
+    stack = roaring.stack(slabs, capacity=cap)
+    return index.batched_and_card(stack, c.slab)
 
 
 def leaf_topk_overlap(c: CompressedLeaf, others, k: int):
@@ -131,8 +128,8 @@ def compression_ratio(c: CompressedLeaf, n: int) -> float:
     cost 16 bits/index, bitmap containers 2^16 bits flat, plus 32-bit
     header per container; values add 32 bits each.
     """
-    card = np.asarray(c.slab_card)
-    kind = np.asarray(c.slab_kind)
+    card = np.asarray(c.slab.cards)
+    kind = np.asarray(c.slab.kinds)
     bits = 32 * int((kind != 0).sum())
     bits += int((16 * card[kind == 1]).sum())
     bits += int((kind == 2).sum()) * (1 << 16)

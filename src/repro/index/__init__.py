@@ -1,30 +1,34 @@
 """Batched sharded query engine for wide Boolean queries over Roaring slabs.
 
-Layers (bottom-up):
+Since the ``repro.roaring`` object API, the stacked-slab *type* is
+``repro.roaring.RoaringSlab`` with a leading batch axis (built by
+``roaring.stack``); this package keeps the expression layer:
 
-  * ``stack`` — ``SlabStack``: N key-aligned slabs packed into stacked
-    arrays, aligned once so wide combines are pure leading-axis reductions;
-  * ``engine`` — Boolean expression trees (AND/OR/ANDNOT over leaves)
-    evaluated as log-depth kind-dispatching tree reductions with a single
-    deferred canonicalization, cardinality-only and top-k-by-cardinality
-    scoring through the batched-meta dispatch kernel, and ``shard_map``
-    sharding of the slab axis across a device mesh.
+  * ``engine`` — Boolean expression trees (AND/OR/ANDNOT over stack members
+    or directly-attached ``leaf(slab)`` operands) evaluated as log-depth
+    kind-dispatching tree reductions with a single deferred canonicalization,
+    cardinality-only and top-k-by-cardinality scoring through the
+    batched-meta dispatch kernel, and ``shard_map`` sharding of the slab
+    axis across a device mesh.
 
-Consumers: ``jax_roaring.union_many_slabs`` (the Algorithm 4 tree),
-``serve.kv_cache`` pool rebuilds, ``sparsity.masks`` pattern unions, and
-``grad_comp`` leaf-overlap scans.
+``SlabStack`` / ``stack_from_slabs`` / ``union_many_batched`` remain as
+deprecated shims over the ``repro.roaring`` equivalents.
+
+Consumers: ``serve.kv_cache`` pool rebuilds, ``sparsity.masks`` pattern
+unions, and ``grad_comp`` leaf-overlap scans.
 """
 
+from repro.index.engine import (And, AndNot, Expr, Leaf, Or, SlabLeaf, and_,
+                                andnot, batched_and_card,
+                                batched_and_card_sharded, execute,
+                                execute_card, leaf, or_, topk_by_card,
+                                topk_by_card_sharded, union_many_batched,
+                                wide_intersect, wide_union)
 from repro.index.stack import SlabStack, stack_from_slabs
-from repro.index.engine import (Expr, Leaf, And, Or, AndNot, leaf, and_, or_,
-                                andnot, execute, execute_card, wide_union,
-                                wide_intersect, batched_and_card,
-                                batched_and_card_sharded, topk_by_card,
-                                topk_by_card_sharded, union_many_batched)
 
 __all__ = [
     "SlabStack", "stack_from_slabs",
-    "Expr", "Leaf", "And", "Or", "AndNot",
+    "Expr", "Leaf", "SlabLeaf", "And", "Or", "AndNot",
     "leaf", "and_", "or_", "andnot",
     "execute", "execute_card", "wide_union", "wide_intersect",
     "batched_and_card", "batched_and_card_sharded",

@@ -1,10 +1,11 @@
-"""The batched wide-query executor: Boolean expression trees over a SlabStack.
+"""The batched wide-query executor: Boolean expression trees over stacked slabs.
 
 The paper's headline wins are *horizontal*: Algorithm 4 unions many bitmaps
 at once, and the library-grade Roaring implementations (CRoaring's
 aggregation layer) earn their keep on exactly these wide AND/OR/ANDNOT
-queries. This module evaluates an expression tree whose leaves are rows of a
-key-aligned ``SlabStack``:
+queries. This module evaluates an expression tree whose leaves are members
+of a key-aligned stacked ``repro.roaring.RoaringSlab`` (``ndim == 2``) — or
+``RoaringSlab`` objects attached to the tree directly via ``leaf(slab)``:
 
   * every binary combine is one *row-state* step from the kind-dispatch
     engine (``jax_roaring._and_rows`` / ``_or_rows`` / ``_andnot_rows``),
@@ -13,7 +14,7 @@ key-aligned ``SlabStack``:
     sparse array pairs merge packed at *every* tree level, not just the
     leaves;
   * n-ary AND/OR nodes reduce in log depth (``_tree_reduce_rows`` over the
-    stacked leaf axis when all children are leaves, balanced pairing
+    stacked leaf axis when all children are stack members, balanced pairing
     otherwise);
   * canonicalization (best-of-three runOptimize) is deferred to a single
     ``_finalize_rows`` at the root — an N-way query pays one pass, not N-1;
@@ -25,22 +26,23 @@ key-aligned ``SlabStack``:
     ``*_sharded`` variants ``shard_map`` the slab axis across a device mesh
     (``launch/mesh.py``) with the query replicated.
 
-Everything is jit-/vmap-compatible; expression shapes are static Python.
+``execute`` returns a canonical ``repro.roaring.RoaringSlab``. Everything is
+jit-/vmap-compatible; expression shapes are static Python.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import jax_roaring as jr
-from repro.index.stack import SlabStack
+from repro.roaring.slab import RoaringSlab, SlabLike, _to_internal, _wrap
 
 __all__ = [
-    "Expr", "Leaf", "And", "Or", "AndNot",
+    "Expr", "Leaf", "SlabLeaf", "And", "Or", "AndNot",
     "leaf", "and_", "or_", "andnot",
     "execute", "execute_card", "wide_union", "wide_intersect",
     "batched_and_card", "batched_and_card_sharded",
@@ -60,9 +62,18 @@ class Expr:
 
 @dataclasses.dataclass(frozen=True)
 class Leaf(Expr):
-    """Slab ``i`` of the stack."""
+    """Member ``i`` of the stacked slab."""
 
     i: int
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SlabLeaf(Expr):
+    """A ``RoaringSlab`` operand attached to the tree directly (no stack
+    membership, no manual tuple unpack) — its rows are gathered key-aligned
+    to the query's shared key row at evaluation time."""
+
+    slab: SlabLike
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,13 +98,18 @@ class AndNot(Expr):
     b: Expr
 
 
-def leaf(i: int) -> Leaf:
-    """Leaf selecting slab ``i`` of the stack (bounds-checked against the
-    stack at evaluation time — jnp's silent index clamping must never turn
-    a bad leaf into a plausible wrong answer)."""
-    if int(i) < 0:
-        raise ValueError(f"leaf index must be >= 0, got {i}")
-    return Leaf(int(i))
+def leaf(x: Union[int, SlabLike]) -> Expr:
+    """Leaf node: an ``int`` selects member ``x`` of the stacked slab
+    (bounds-checked at evaluation time — jnp's silent index clamping must
+    never turn a bad leaf into a plausible wrong answer); a ``RoaringSlab``
+    becomes its own operand (``SlabLeaf``)."""
+    if isinstance(x, (RoaringSlab, jr.RoaringSlab)):
+        if isinstance(x, RoaringSlab) and x.ndim != 1:
+            raise ValueError("leaf(slab) needs a single slab (ndim == 1)")
+        return SlabLeaf(x)
+    if int(x) < 0:
+        raise ValueError(f"leaf index must be >= 0, got {x}")
+    return Leaf(int(x))
 
 
 def and_(*children: Expr) -> Expr:
@@ -121,11 +137,41 @@ def andnot(a: Expr, b: Expr) -> AndNot:
 # evaluation (row states: (data u16[C, 4096], card i32[C], kind i32[C]))
 # =============================================================================
 
-def _leaf_state(stack: SlabStack, i: int):
+def _slab_leaves(expr: Expr) -> list:
+    if isinstance(expr, SlabLeaf):
+        return [expr.slab]
+    if isinstance(expr, (And, Or)):
+        return [s for c in expr.children for s in _slab_leaves(c)]
+    if isinstance(expr, AndNot):
+        return _slab_leaves(expr.a) + _slab_leaves(expr.b)
+    return []
+
+
+def _shared_keys(stack: Optional[RoaringSlab], expr: Expr,
+                 capacity: Optional[int]) -> jax.Array:
+    """The shared key row every leaf aligns to: the stack's aligned key row
+    when a stack is given, else the merged key set of all slab leaves.
+    Slab leaves with keys outside the stack's row contribute nothing there —
+    pass ``stack=None`` (or restack) when leaf keys may exceed the stack's.
+    """
+    if stack is not None:
+        return stack.keys[0]
+    slabs = [_to_internal(s) for s in _slab_leaves(expr)]
+    if not slabs:
+        raise ValueError("execute(stack=None, ...) needs slab leaves")
+    if capacity is None:
+        capacity = sum(s.keys.shape[-1] for s in slabs)
+    return jr._merge_keys_many([s.keys for s in slabs], capacity)
+
+
+def _leaf_state(stack: Optional[RoaringSlab], i: int):
+    if stack is None:
+        raise ValueError(f"leaf({i}) needs a stacked slab; this expression "
+                         "was executed without one")
     if not 0 <= i < stack.n_slabs:
         raise IndexError(
             f"leaf({i}) out of range for a stack of {stack.n_slabs} slabs")
-    return stack.data[i], stack.card[i], stack.kind[i]
+    return stack.payload[i], stack.cards[i], stack.kinds[i]
 
 
 def _fold_states(states, combine):
@@ -142,8 +188,8 @@ def _fold_states(states, combine):
     return states[0]
 
 
-def _nary(stack: SlabStack, children, combine):
-    if all(isinstance(c, Leaf) for c in children):
+def _nary(stack, keys, children, combine):
+    if stack is not None and all(isinstance(c, Leaf) for c in children):
         # vectorized: slice the stacked leaf axis and tree-reduce flat —
         # every level is ONE combine over (n/2)*C rows, not n/2 traced calls
         for c in children:
@@ -151,70 +197,91 @@ def _nary(stack: SlabStack, children, combine):
                 raise IndexError(f"leaf({c.i}) out of range for a stack of "
                                  f"{stack.n_slabs} slabs")
         idx = jnp.asarray([c.i for c in children], jnp.int32)
-        return jr._tree_reduce_rows(stack.data[idx], stack.card[idx],
-                                    stack.kind[idx], combine)
-    return _fold_states([_eval(stack, c) for c in children], combine)
+        return jr._tree_reduce_rows(stack.payload[idx], stack.cards[idx],
+                                    stack.kinds[idx], combine)
+    return _fold_states([_eval(stack, keys, c) for c in children], combine)
 
 
-def _eval(stack: SlabStack, expr: Expr):
+def _eval(stack, keys, expr: Expr):
     if isinstance(expr, Leaf):
         return _leaf_state(stack, expr.i)
+    if isinstance(expr, SlabLeaf):
+        return jr._gather_raw(_to_internal(expr.slab), keys)
     if isinstance(expr, And):
-        return _nary(stack, expr.children, jr._and_rows)
+        return _nary(stack, keys, expr.children, jr._and_rows)
     if isinstance(expr, Or):
-        return _nary(stack, expr.children, jr._or_rows)
+        return _nary(stack, keys, expr.children, jr._or_rows)
     if isinstance(expr, AndNot):
-        a = _eval(stack, expr.a)
-        b = _eval(stack, expr.b)
+        a = _eval(stack, keys, expr.a)
+        b = _eval(stack, keys, expr.b)
         return jr._andnot_rows(a[0], a[1], a[2], b[0], b[1], b[2])
     raise TypeError(f"not an Expr: {expr!r}")
 
 
-def execute(stack: SlabStack, expr: Expr) -> jr.RoaringSlab:
-    """Evaluate ``expr`` over the stack -> canonical RoaringSlab.
+def _normalize(stack, expr):
+    """Allow ``execute(expr)`` when every leaf carries its own slab."""
+    if isinstance(stack, Expr) and expr is None:
+        return None, stack
+    if expr is None:
+        raise TypeError("execute needs an expression")
+    return stack, expr
+
+
+def execute(stack: Optional[RoaringSlab], expr: Optional[Expr] = None,
+            capacity: Optional[int] = None) -> RoaringSlab:
+    """Evaluate ``expr`` over the stacked slab -> canonical ``RoaringSlab``.
 
     One deferred best-of-three canonicalization at the root; output is
     bit-identical (values, card, kind, packed payload) to evaluating the
-    same expression with ``py_roaring`` set algebra.
+    same expression with ``py_roaring`` set algebra. ``stack`` may be
+    ``None`` (or omitted) when every leaf is a ``leaf(slab)`` — the shared
+    key row is then the merged key set of the slab leaves (``capacity``
+    bounds it, defaulting to the sum of leaf capacities).
     """
-    data, card, kind = _eval(stack, expr)
-    return jr._finalize_rows(stack.keys[0], data, card, kind)
+    stack, expr = _normalize(stack, expr)
+    keys = _shared_keys(stack, expr, capacity)
+    data, card, kind = _eval(stack, keys, expr)
+    return _wrap(jr._finalize_rows(keys, data, card, kind))
 
 
-def execute_card(stack: SlabStack, expr: Expr) -> jax.Array:
+def execute_card(stack: Optional[RoaringSlab],
+                 expr: Optional[Expr] = None,
+                 capacity: Optional[int] = None) -> jax.Array:
     """|expr| without materializing a result slab — every combine level
     already maintains exact per-row cardinalities (fused popcounts on the
     bitmap-domain paths), so the root's counter sum is the answer."""
-    _, card, _ = _eval(stack, expr)
+    stack, expr = _normalize(stack, expr)
+    keys = _shared_keys(stack, expr, capacity)
+    _, card, _ = _eval(stack, keys, expr)
     return jnp.sum(card)
 
 
-def wide_union(stack: SlabStack) -> jr.RoaringSlab:
+def wide_union(stack: RoaringSlab) -> RoaringSlab:
     """Union of all N stacked slabs (Algorithm 4): log-depth tree reduction,
     kind-dispatching at every level, deferred cardinality (one recount at
     the root), single deferred canonicalization."""
-    data, card, kind = jr._tree_reduce_rows(stack.data, stack.card,
-                                            stack.kind, jr._or_rows_deferred)
+    data, card, kind = jr._tree_reduce_rows(stack.payload, stack.cards,
+                                            stack.kinds, jr._or_rows_deferred)
     card = jr._recount_bitmap_rows(data, card, kind)
-    return jr._finalize_rows(stack.keys[0], data, card, kind)
+    return _wrap(jr._finalize_rows(stack.keys[0], data, card, kind))
 
 
-def wide_intersect(stack: SlabStack) -> jr.RoaringSlab:
+def wide_intersect(stack: RoaringSlab) -> RoaringSlab:
     """Intersection of all N stacked slabs: log-depth tree of registry
     dispatch steps (arrays gallop, runs range-mask, bitmaps word-AND with
     fused popcount), single deferred canonicalization."""
-    data, card, kind = jr._tree_reduce_rows(stack.data, stack.card,
-                                            stack.kind, jr._and_rows)
-    return jr._finalize_rows(stack.keys[0], data, card, kind)
+    data, card, kind = jr._tree_reduce_rows(stack.payload, stack.cards,
+                                            stack.kinds, jr._and_rows)
+    return _wrap(jr._finalize_rows(stack.keys[0], data, card, kind))
 
 
 # =============================================================================
 # batched scoring: all N slabs against one query in one dispatch launch
 # =============================================================================
 
-def _align_query(stack: SlabStack, query: jr.RoaringSlab):
+def _align_query(stack: RoaringSlab, query: SlabLike):
     """Gather the query's rows aligned to the stack's key row."""
-    qd, qc, qk = jr._gather_raw(query, stack.keys[0])
+    qd, qc, qk = jr._gather_raw(_to_internal(query), stack.keys[0])
     return qd, qc, qk, jr._rows_nruns(qd, qk)
 
 
@@ -232,7 +299,7 @@ def _stack_scores(data, card, kind, nruns, qd, qc, qk, qr):
     return jnp.sum(rc, axis=1)
 
 
-def batched_and_card(stack: SlabStack, query: jr.RoaringSlab) -> jax.Array:
+def batched_and_card(stack: RoaringSlab, query: SlabLike) -> jax.Array:
     """i32[N] of |slab_n ∩ query| — the wide-query scoring primitive.
 
     One ``intersect_dispatch_stacked`` launch covers all N*C container
@@ -240,11 +307,11 @@ def batched_and_card(stack: SlabStack, query: jr.RoaringSlab) -> jax.Array:
     materialized or canonicalized.
     """
     qd, qc, qk, qr = _align_query(stack, query)
-    return _stack_scores(stack.data, stack.card, stack.kind, stack.nruns,
+    return _stack_scores(stack.payload, stack.cards, stack.kinds, stack.nruns,
                          qd, qc, qk, qr)
 
 
-def topk_by_card(stack: SlabStack, query: jr.RoaringSlab, k: int):
+def topk_by_card(stack: RoaringSlab, query: SlabLike, k: int):
     """Top-k stacked slabs by intersection cardinality with ``query``.
 
     Returns ``(scores i32[k], indices i32[k])`` — ``jax.lax.top_k`` over the
@@ -266,7 +333,7 @@ def _shard_map():
     return shard_map
 
 
-def batched_and_card_sharded(stack: SlabStack, query: jr.RoaringSlab,
+def batched_and_card_sharded(stack: RoaringSlab, query: SlabLike,
                              mesh, axis: str = "data") -> jax.Array:
     """``batched_and_card`` with the slab axis sharded over ``mesh[axis]``.
 
@@ -282,10 +349,11 @@ def batched_and_card_sharded(stack: SlabStack, query: jr.RoaringSlab,
         _stack_scores, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(), P(), P()),
         out_specs=P(axis))
-    return f(stack.data, stack.card, stack.kind, stack.nruns, qd, qc, qk, qr)
+    return f(stack.payload, stack.cards, stack.kinds, stack.nruns,
+             qd, qc, qk, qr)
 
 
-def topk_by_card_sharded(stack: SlabStack, query: jr.RoaringSlab, k: int,
+def topk_by_card_sharded(stack: RoaringSlab, query: SlabLike, k: int,
                          mesh, axis: str = "data"):
     """Sharded ``topk_by_card``: local scoring per device shard, global
     ``top_k`` over the gathered i32[N] scores (k*axis_size candidate traffic,
@@ -295,18 +363,17 @@ def topk_by_card_sharded(stack: SlabStack, query: jr.RoaringSlab, k: int,
 
 
 # =============================================================================
-# batched (vmapped) wide union — the mask-compiler consumer's shape
+# batched (vmapped) wide union — deprecated shim over repro.roaring.union_all
 # =============================================================================
 
-def union_many_batched(slabs: Sequence[jr.RoaringSlab],
-                       capacity: int) -> jr.RoaringSlab:
-    """N-way union vmapped over a leading batch axis.
+def union_many_batched(slabs: Sequence[SlabLike],
+                       capacity: int) -> RoaringSlab:
+    """Deprecated: use ``repro.roaring.union_all`` (same vmapped tree)."""
+    import warnings
 
-    ``slabs``: N same-capacity RoaringSlabs whose arrays carry a leading
-    batch axis ``[B, ...]`` (e.g. one slab per attention pattern, batched
-    over mask rows). Returns the batched union slab ``[B, ...]`` — the tree
-    reduction with its ``lax.cond`` laziness guards lowered to selects by
-    vmap (every pass runs batched; correct, and still log-depth).
-    """
-    return jax.vmap(
-        lambda *ss: jr.union_many_slabs(list(ss), capacity))(*slabs)
+    from repro.roaring.slab import union_all
+    warnings.warn(
+        "repro.index.union_many_batched is deprecated; use "
+        "repro.roaring.union_all(slabs, capacity=...)",
+        DeprecationWarning, stacklevel=2)
+    return union_all(slabs, capacity=capacity)

@@ -1,83 +1,38 @@
-"""SlabStack: N key-aligned Roaring slabs packed into stacked arrays.
+"""Deprecated module: ``SlabStack`` is absorbed by ``repro.roaring``.
 
-The wide-query layout (paper Algorithm 4, the 2018 CRoaring paper's
-aggregation layer): a Boolean query over many bitmaps wants every operand's
-container for chunk ``k`` resident in the *same* row position, so the
-N-way combine is a pure leading-axis reduction with no per-level key
-re-alignment. ``stack_from_slabs`` pays the alignment once — merged key
-set, one gather per slab — and everything downstream (the expression
-executor, the batched-meta dispatch kernel, ``shard_map`` sharding over the
-slab axis) indexes ``[n, c]`` directly.
+A stacked slab is just a ``repro.roaring.RoaringSlab`` whose leaves carry a
+leading batch axis (``ndim == 2``) — ``roaring.stack(slabs)`` performs the
+one-time key alignment the old ``stack_from_slabs`` did, and the expression
+executor, the batched-meta dispatch kernel, and the ``shard_map`` scoring
+variants all consume the same type.
 
-Layout (``C = capacity``, static):
-
-``keys  i32[N, C]``  per-slab key rows — all identical after alignment
-                     (``keys[0]`` is *the* key row), ``KEY_SENTINEL`` padded
-``card  i32[N, C]``  per-row cardinality counters
-``kind  i32[N, C]``  container kind tags (0 empty / 1 array / 2 bitmap / 3 run)
-``nruns i32[N, C]``  per-row run counts (0 for non-run rows) — precomputed so
-                     the dispatch kernels' scalar-prefetch meta is a reshape,
-                     not a payload scan per query
-``data  u16[N, C, 4096]``  raw container rows in native form (packed arrays /
-                     bitmap words / run pairs — never lifted)
+``stack_from_slabs`` is a working shim (``DeprecationWarning``).
+``SlabStack`` is only a *typing/isinstance* alias: the old NamedTuple
+interface is gone — field names changed (``card``/``kind``/``data`` →
+``cards``/``kinds``/``payload``), ``.slab(i)`` is ``s[i]``, and
+``isinstance(x, SlabStack)`` now matches any ``RoaringSlab`` regardless of
+batch shape. See ``docs/MIGRATION.md``.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+import warnings
+from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import jax_roaring as jr
+from repro.roaring.slab import RoaringSlab, SlabLike
+from repro.roaring.slab import stack as _stack
 
 __all__ = ["SlabStack", "stack_from_slabs"]
 
-
-class SlabStack(NamedTuple):
-    """N key-aligned slabs as stacked arrays (see module docstring)."""
-
-    keys: jax.Array    # i32[N, C]
-    card: jax.Array    # i32[N, C]
-    kind: jax.Array    # i32[N, C]
-    nruns: jax.Array   # i32[N, C]
-    data: jax.Array    # u16[N, C, 4096]
-
-    @property
-    def n_slabs(self) -> int:
-        return self.keys.shape[0]
-
-    @property
-    def capacity(self) -> int:
-        return self.keys.shape[1]
-
-    def slab(self, i: int) -> jr.RoaringSlab:
-        """Row ``i`` back as a plain (non-canonicalized) RoaringSlab view."""
-        return jr.RoaringSlab(keys=self.keys[i], card=self.card[i],
-                              kind=self.kind[i], data=self.data[i])
+# deprecated alias: the stacked-slab *type* is the object API type itself
+SlabStack = RoaringSlab
 
 
-def stack_from_slabs(slabs: Sequence[jr.RoaringSlab],
-                     capacity: int | None = None) -> SlabStack:
-    """Pack N slabs into one key-aligned SlabStack.
-
-    The merged key set over all N slabs is computed once (sort + dedupe of
-    the concatenated key columns); each slab's rows are then gathered
-    key-aligned in native container form — a slab missing a key contributes
-    an EMPTY row there. ``capacity`` is the static output key capacity and
-    must cover the merged distinct key count (defaults, conservatively, to
-    the sum of input capacities). Per-row run counts are precomputed into
-    ``nruns`` so downstream dispatch meta is assembly-free.
-    """
-    if not slabs:
-        raise ValueError("stack_from_slabs needs at least one slab")
-    if capacity is None:
-        capacity = sum(s.capacity for s in slabs)
-    keys = jr._merge_keys_many([s.keys for s in slabs], capacity)
-    gathered = [jr._gather_raw(s, keys) for s in slabs]
-    data = jnp.stack([g[0] for g in gathered])
-    card = jnp.stack([g[1] for g in gathered])
-    kind = jnp.stack([g[2] for g in gathered])
-    nruns = jnp.stack([jr._rows_nruns(g[0], g[2]) for g in gathered])
-    return SlabStack(keys=jnp.broadcast_to(keys, (len(slabs),) + keys.shape),
-                     card=card, kind=kind, nruns=nruns, data=data)
+def stack_from_slabs(slabs: Sequence[SlabLike],
+                     capacity: Optional[int] = None) -> RoaringSlab:
+    """Deprecated: use ``repro.roaring.stack`` (same alignment semantics)."""
+    warnings.warn(
+        "repro.index.stack_from_slabs is deprecated; use "
+        "repro.roaring.stack(slabs, capacity=...)",
+        DeprecationWarning, stacklevel=2)
+    return _stack(slabs, capacity=capacity)

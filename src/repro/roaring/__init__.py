@@ -1,0 +1,27 @@
+"""``repro.roaring`` — the stable v1 public Roaring surface.
+
+One type, pytree-native: ``RoaringSlab`` carries the slab arrays as leaves
+and the static capacity ``C`` as aux data, so it flows through ``jit`` /
+``vmap`` / ``shard_map`` unchanged, with operator algebra (``&``, ``|``,
+``^``, ``-``) bit-identical to the ``py_roaring`` oracle and a leading
+batch axis replacing the old ``index.SlabStack``. ``RoaringFormatSpec`` is
+the portable serialization codec behind ``RoaringSlab.serialize`` /
+``deserialize``.
+
+The old ``repro.core.jax_roaring.slab_*`` free functions still work but are
+deprecated shims over the same engine — see ``docs/MIGRATION.md``.
+"""
+
+from repro.core.jax_roaring import (ARRAY_MAX, CHUNK_BITS, CHUNK_SIZE,
+                                    KEY_SENTINEL, KIND_ARRAY, KIND_BITMAP,
+                                    KIND_EMPTY, KIND_RUN, MAX_RUNS, ROW_WORDS)
+from repro.roaring.format import RoaringFormatSpec
+from repro.roaring.slab import (RoaringSlab, intersect_all, stack, union_all)
+
+__all__ = [
+    "RoaringSlab", "RoaringFormatSpec",
+    "stack", "union_all", "intersect_all",
+    # layout constants re-exported for consumers inspecting .kinds / .keys
+    "CHUNK_BITS", "CHUNK_SIZE", "ARRAY_MAX", "ROW_WORDS", "MAX_RUNS",
+    "KEY_SENTINEL", "KIND_EMPTY", "KIND_ARRAY", "KIND_BITMAP", "KIND_RUN",
+]

@@ -1,0 +1,149 @@
+"""Portable Roaring serialization (``RoaringFormatSpec``).
+
+The interchange format of the Roaring ecosystem (the layout CRoaring,
+RoaringBitmap/Java, and pyroaring all read and write — see the 2017
+implementation paper, S4 "Serialization"):
+
+* little-endian ``u32`` cookie — ``12347`` (``SERIAL_COOKIE``, low 16 bits)
+  when any run container is present, with ``n_containers - 1`` packed in the
+  high 16 bits; plain ``12346`` (``SERIAL_COOKIE_NO_RUNCONTAINER``) followed
+  by a ``u32`` container count otherwise;
+* with runs: a bitset of ``ceil(n/8)`` bytes flagging which containers are
+  run-encoded;
+* the *descriptive header*: one ``(key u16, cardinality-1 u16)`` pair per
+  container, in ascending key order;
+* the *offset header* — one ``u32`` byte offset (from the start of the
+  stream) per container — present when there are no runs, or when
+  ``n_containers >= NO_OFFSET_THRESHOLD`` (4);
+* container payloads in key order: arrays as ``card`` sorted ``u16`` values,
+  bitmaps as 1024 little-endian ``u64`` words (8 kB), runs as a ``u16`` run
+  count followed by ``(start u16, length-1 u16)`` pairs.
+
+Kind round-trips exactly for every container the format can represent: a
+non-run container is a bitmap iff ``cardinality > 4096``, which is precisely
+the slab/oracle canonical rule (array takes the 4096 tie), so canonical
+bitmaps — every set-algebra output — serialize and deserialize to identical
+kinds, payloads, and bytes. The codec is host-side (bytes are not a device
+type); the device entry points are ``RoaringSlab.serialize`` /
+``RoaringSlab.deserialize``.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import List
+
+import numpy as np
+
+from repro.core import py_roaring as pr
+
+__all__ = ["RoaringFormatSpec"]
+
+
+class RoaringFormatSpec:
+    """Codec constants + (de)serialization of host ``RoaringBitmap``s."""
+
+    SERIAL_COOKIE: int = 12347
+    SERIAL_COOKIE_NO_RUNCONTAINER: int = 12346
+    NO_OFFSET_THRESHOLD: int = 4
+
+    @classmethod
+    def serialize(cls, rb: pr.RoaringBitmap) -> bytes:
+        """``RoaringBitmap`` -> portable byte stream (format above)."""
+        n = len(rb.keys)
+        has_run = any(isinstance(c, pr.RunContainer) for c in rb.containers)
+        buf = bytearray()
+        if has_run:
+            buf += struct.pack("<I", cls.SERIAL_COOKIE | ((n - 1) << 16))
+            bitset = bytearray((n + 7) // 8)
+            for i, c in enumerate(rb.containers):
+                if isinstance(c, pr.RunContainer):
+                    bitset[i >> 3] |= 1 << (i & 7)
+            buf += bitset
+        else:
+            buf += struct.pack("<II", cls.SERIAL_COOKIE_NO_RUNCONTAINER, n)
+        for k, c in zip(rb.keys, rb.containers):
+            if not 0 <= k < (1 << 16):
+                raise ValueError(f"container key {k} outside the 32-bit "
+                                 "universe the portable format addresses")
+            if c.cardinality == 0:
+                raise ValueError(f"empty container at key {k} (the format "
+                                 "has no empty-container encoding)")
+            buf += struct.pack("<HH", k, c.cardinality - 1)
+        with_offsets = (not has_run) or n >= cls.NO_OFFSET_THRESHOLD
+        off_pos = len(buf)
+        if with_offsets:
+            buf += b"\x00" * (4 * n)
+        offsets: List[int] = []
+        for c in rb.containers:
+            offsets.append(len(buf))
+            if isinstance(c, pr.RunContainer):
+                buf += struct.pack("<H", c.n_runs)
+                pairs = np.empty(2 * c.n_runs, dtype="<u2")
+                pairs[0::2] = c.starts
+                pairs[1::2] = c.lengths          # stored as length-1 already
+                buf += pairs.tobytes()
+            elif isinstance(c, pr.BitmapContainer):
+                buf += np.ascontiguousarray(c.words, dtype="<u8").tobytes()
+            else:
+                buf += np.ascontiguousarray(c.arr, dtype="<u2").tobytes()
+        if with_offsets:
+            buf[off_pos:off_pos + 4 * n] = struct.pack(f"<{n}I", *offsets)
+        return bytes(buf)
+
+    @classmethod
+    def deserialize(cls, data: bytes) -> pr.RoaringBitmap:
+        """Portable byte stream -> ``RoaringBitmap`` (kinds reconstructed:
+        run containers from the flag bitset, bitmap iff card > 4096)."""
+        if len(data) < 4:
+            raise ValueError("truncated stream: missing cookie")
+        (cookie,) = struct.unpack_from("<I", data, 0)
+        pos = 4
+        if cookie & 0xFFFF == cls.SERIAL_COOKIE:
+            n = (cookie >> 16) + 1
+            nbytes = (n + 7) // 8
+            runbits = data[pos:pos + nbytes]
+            pos += nbytes
+            is_run = [(runbits[i >> 3] >> (i & 7)) & 1 == 1 for i in range(n)]
+            with_offsets = n >= cls.NO_OFFSET_THRESHOLD
+        elif cookie == cls.SERIAL_COOKIE_NO_RUNCONTAINER:
+            (n,) = struct.unpack_from("<I", data, pos)
+            pos += 4
+            is_run = [False] * n
+            with_offsets = True
+        else:
+            raise ValueError(f"not a portable roaring stream (cookie "
+                             f"{cookie & 0xFFFF})")
+        keys, cards = [], []
+        for _ in range(n):
+            k, cm1 = struct.unpack_from("<HH", data, pos)
+            pos += 4
+            keys.append(k)
+            cards.append(cm1 + 1)
+        if with_offsets:
+            pos += 4 * n                          # derivable; not needed here
+        rb = pr.RoaringBitmap()
+        for i in range(n):
+            if is_run[i]:
+                (n_runs,) = struct.unpack_from("<H", data, pos)
+                pos += 2
+                pairs = np.frombuffer(data, dtype="<u2", count=2 * n_runs,
+                                      offset=pos).astype(np.int64)
+                pos += 4 * n_runs
+                c: pr.Container = pr.RunContainer(pairs[0::2], pairs[1::2])
+            elif cards[i] > pr.ARRAY_MAX:
+                words = np.frombuffer(data, dtype="<u8", count=1024,
+                                      offset=pos).astype(np.uint64)
+                pos += 8192
+                c = pr.BitmapContainer(words, cardinality=cards[i])
+            else:
+                arr = np.frombuffer(data, dtype="<u2", count=cards[i],
+                                    offset=pos).astype(np.uint16)
+                pos += 2 * cards[i]
+                c = pr.ArrayContainer(arr)
+            if c.cardinality != cards[i]:
+                raise ValueError(f"container {i}: header cardinality "
+                                 f"{cards[i]} != payload {c.cardinality}")
+            rb.keys.append(keys[i])
+            rb.containers.append(c)
+        return rb

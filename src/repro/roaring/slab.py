@@ -1,0 +1,413 @@
+"""``RoaringSlab`` — the pytree-native Roaring container object.
+
+The stable v1 object API over the kind-dispatch engine in
+``repro.core.jax_roaring``: a frozen, pytree-registered dataclass whose
+leaves are the slab arrays (``keys`` / ``kinds`` / ``cards`` / ``nruns`` /
+``payload``) and whose static aux data is the container capacity ``C`` — so
+a ``RoaringSlab`` flows through ``jit`` / ``vmap`` / ``shard_map`` natively
+and ``jit`` caches by (shapes, C).
+
+Batch axes are explicit and leading: a single slab has ``keys: i32[C]``
+(``ndim == 1``); a *stacked* slab — N slabs key-aligned by ``stack()`` —
+is the same type with ``keys: i32[N, C]`` (``ndim == 2``). Every operator
+and method broadcasts over leading batch axes (vmapped internally), so the
+expression ``a & b | c`` works identically on single and stacked slabs, and
+``shard_map`` can shard the leading axis with one ``PartitionSpec``.
+
+Set-algebra outputs keep the engine's canonical-kind invariant: per row the
+serialized sizes 2·card (array) / 8192 (bitmap) / 4·n_runs (run) are
+compared and the strict best-of-three wins, matching the ``py_roaring``
+oracle kind-for-kind and payload-for-payload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_roaring as jr
+from repro.roaring.format import RoaringFormatSpec
+
+__all__ = ["RoaringSlab", "stack", "union_all", "intersect_all"]
+
+# values accepted wherever a slab operand is expected: the object API type
+# or the internal row-state NamedTuple (coerced, never copied)
+SlabLike = Union["RoaringSlab", jr.RoaringSlab]
+
+
+def _to_internal(s: SlabLike) -> jr.RoaringSlab:
+    """Object -> internal engine NamedTuple view (no copy). 1-D only."""
+    if isinstance(s, RoaringSlab):
+        return jr.RoaringSlab(keys=s.keys, card=s.cards, kind=s.kinds,
+                              data=s.payload)
+    return s
+
+
+def _wrap(t: jr.RoaringSlab) -> "RoaringSlab":
+    """Internal engine NamedTuple -> object (recomputes the nruns leaf)."""
+    return RoaringSlab(keys=t.keys, kinds=t.kind, cards=t.card,
+                       nruns=jr._rows_nruns(t.data, t.kind), payload=t.data,
+                       C=t.keys.shape[-1])
+
+
+def _as_object(s: SlabLike) -> "RoaringSlab":
+    return s if isinstance(s, RoaringSlab) else _wrap(s)
+
+
+def _batch_shape(s: SlabLike) -> Tuple[int, ...]:
+    return tuple(s.keys.shape[:-1])
+
+
+def _broadcast_map(f, operands: Sequence[SlabLike]):
+    """Apply ``f`` (defined over 1-D object slabs) across leading batch axes.
+
+    All batched operands must share one batch shape; unbatched operands are
+    broadcast (``in_axes=None``). One ``jax.vmap`` level per batch axis.
+    """
+    shapes = {_batch_shape(s) for s in operands if _batch_shape(s)}
+    if len(shapes) > 1:
+        raise ValueError(f"mismatched slab batch shapes: {sorted(shapes)}")
+    objs = [_as_object(s) for s in operands]
+    if not shapes:
+        return f(*objs)
+    in_axes = tuple(0 if _batch_shape(s) else None for s in objs)
+    g = f
+    for _ in shapes.pop():
+        g = jax.vmap(g, in_axes=in_axes)
+    return g(*objs)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RoaringSlab:
+    """Static-capacity Roaring bitmap with ``C`` container rows.
+
+    Leaves (pytree data fields; a leading batch axis makes a stacked slab):
+
+    * ``keys    i32[..., C]``        sorted chunk keys, ``KEY_SENTINEL`` pad
+    * ``kinds   i32[..., C]``        0 empty / 1 array / 2 bitmap / 3 run
+    * ``cards   i32[..., C]``        per-container cardinality counters
+    * ``nruns   i32[..., C]``        per-row run counts (0 for non-run rows)
+    * ``payload u16[..., C, 4096]``  8 kB rows: packed arrays / bitmap words
+      / ``(start, len-1)`` run pairs
+
+    ``C`` is static aux data — it never enters tracing, so ``jit`` caches by
+    shape and capacity.
+    """
+
+    keys: jax.Array
+    kinds: jax.Array
+    cards: jax.Array
+    nruns: jax.Array
+    payload: jax.Array
+    C: int
+
+    # -- static shape facts ---------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Static container capacity ``C``."""
+        return self.C
+
+    @property
+    def ndim(self) -> int:
+        """1 for a single slab, 2 for a stacked slab, higher when vmapped."""
+        return self.keys.ndim
+
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return tuple(self.keys.shape[:-1])
+
+    @property
+    def n_slabs(self) -> int:
+        """Leading-axis length of a stacked slab."""
+        if self.ndim < 2:
+            raise ValueError("n_slabs needs a stacked slab (ndim >= 2)")
+        return self.keys.shape[0]
+
+    def __getitem__(self, i) -> "RoaringSlab":
+        """Slice the leading batch axis (stacked slab -> member slab)."""
+        if self.ndim < 2:
+            raise IndexError("cannot index a single slab (ndim == 1)")
+        return RoaringSlab(keys=self.keys[i], kinds=self.kinds[i],
+                           cards=self.cards[i], nruns=self.nruns[i],
+                           payload=self.payload[i], C=self.C)
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def empty(cls, capacity: int) -> "RoaringSlab":
+        """All-empty slab — the identity of ``|`` and ``union_all``."""
+        return _wrap(jr.empty(capacity))
+
+    @classmethod
+    def from_indices(cls, idx: jax.Array, valid: jax.Array,
+                     capacity: int) -> "RoaringSlab":
+        """Device-side: (padded) sorted unique integer indices -> slab."""
+        return _wrap(jr.from_indices(idx, valid, capacity))
+
+    @classmethod
+    def from_values(cls, values: np.ndarray, capacity: int,
+                    max_elems: int) -> "RoaringSlab":
+        """Host-side: numpy integer values -> slab (pads to ``max_elems``)."""
+        return _wrap(jr.from_dense_array(values, capacity, max_elems))
+
+    @classmethod
+    def from_roaring(cls, rb, capacity: int) -> "RoaringSlab":
+        """Host ``py_roaring.RoaringBitmap`` -> slab, kind-preserving (run
+        containers land as run rows, nothing materialized)."""
+        return _wrap(jr.from_roaring(rb, capacity))
+
+    @classmethod
+    def from_ranges(cls, ranges: Iterable[Tuple[int, int]],
+                    capacity: int) -> "RoaringSlab":
+        """Half-open ``[start, end)`` integer ranges -> run-row slab."""
+        return _wrap(jr.from_ranges(ranges, capacity))
+
+    @classmethod
+    def deserialize(cls, data: bytes,
+                    capacity: Optional[int] = None) -> "RoaringSlab":
+        """Portable Roaring byte stream -> slab (host-side; see
+        ``RoaringFormatSpec``). ``capacity`` defaults to the container
+        count in the stream."""
+        rb = RoaringFormatSpec.deserialize(data)
+        if capacity is None:
+            capacity = max(1, len(rb.keys))
+        return cls.from_roaring(rb, capacity)
+
+    # -- exporters ------------------------------------------------------------
+    def to_roaring(self):
+        """Slab -> host ``RoaringBitmap``, kind-preserving (1-D only)."""
+        self._require_single("to_roaring")
+        return jr.to_roaring(_to_internal(self))
+
+    def serialize(self) -> bytes:
+        """Slab -> portable Roaring byte stream (host-side; byte-identical
+        to ``RoaringFormatSpec.serialize`` of the same oracle bitmap)."""
+        self._require_single("serialize")
+        return RoaringFormatSpec.serialize(self.to_roaring())
+
+    def to_indices(self, max_out: int) -> Tuple[jax.Array, jax.Array]:
+        """Device-side: ``(sorted values, valid)`` padded to ``max_out``."""
+        return _broadcast_map(
+            lambda s: jr.to_indices(_to_internal(s), max_out), [self])
+
+    def to_dense(self, universe: Optional[int] = None) -> np.ndarray:
+        """Host-side dense ``bool[universe]`` membership vector (1-D only;
+        ``universe`` defaults to the tightest chunk-aligned bound)."""
+        self._require_single("to_dense")
+        vals = self.to_roaring().to_array()
+        if universe is None:
+            hi = int(vals[-1]) + 1 if vals.size else 0
+            universe = ((hi + jr.CHUNK_SIZE - 1) // jr.CHUNK_SIZE) \
+                * jr.CHUNK_SIZE
+        out = np.zeros((universe,), bool)
+        out[vals[vals < universe]] = True
+        return out
+
+    # -- scalar accounting ----------------------------------------------------
+    def card(self) -> jax.Array:
+        """Total cardinality (sum of the per-container counters, paper S2);
+        ``i32[]`` for a single slab, ``i32[N]`` per stacked member."""
+        return jnp.sum(self.cards, axis=-1)
+
+    def n_containers(self) -> jax.Array:
+        """# live container rows."""
+        return jnp.sum((self.kinds != jr.KIND_EMPTY).astype(jnp.int32),
+                       axis=-1)
+
+    def size_in_bytes(self) -> jax.Array:
+        """Exact serialized-size accounting (the paper's bits/item metric):
+        8-byte index header + 4 bytes/container + 2·card / 8192 / 4·n_runs
+        payloads — equals the oracle's ``size_in_bytes`` byte-for-byte."""
+        payload = jnp.where(self.kinds == jr.KIND_ARRAY, 2 * self.cards,
+                            jnp.where(self.kinds == jr.KIND_BITMAP,
+                                      2 * jr.ROW_WORDS,
+                                      jnp.where(self.kinds == jr.KIND_RUN,
+                                                4 * self.nruns, 0)))
+        live = (self.kinds != jr.KIND_EMPTY).astype(jnp.int32)
+        return 8 + jnp.sum(live * (4 + payload), axis=-1)
+
+    # -- membership / rank / select -------------------------------------------
+    def contains(self, queries: jax.Array) -> jax.Array:
+        """Batched membership test — per-kind probes, log-bounded traffic."""
+        return _broadcast_map(
+            lambda s: jr.contains(_to_internal(s), queries), [self])
+
+    def rank(self, x: jax.Array) -> jax.Array:
+        """# elements <= x."""
+        return _broadcast_map(lambda s: jr.rank(_to_internal(s), x), [self])
+
+    def select(self, j: jax.Array) -> jax.Array:
+        """Value of the j-th (0-based) smallest element; -1 out of range."""
+        return _broadcast_map(
+            lambda s: jr._slab_select(_to_internal(s), j), [self])
+
+    def run_optimize(self) -> "RoaringSlab":
+        """Device-side ``runOptimize``: re-canonicalize every row
+        best-of-three through the engine."""
+        return _broadcast_map(
+            lambda s: _wrap(jr._slab_run_optimize(_to_internal(s))), [self])
+
+    # -- set algebra (kind-dispatch engine; canonical outputs) ----------------
+    def _binary(self, other: SlabLike, impl,
+                capacity: Optional[int]) -> "RoaringSlab":
+        return _broadcast_map(
+            lambda a, b: _wrap(impl(_to_internal(a), _to_internal(b),
+                                    capacity=capacity)),
+            [self, other])
+
+    def and_(self, other: SlabLike,
+             capacity: Optional[int] = None) -> "RoaringSlab":
+        """A ∩ B over the registry's 4x4 dispatch grid. Output capacity
+        defaults to ``min(C_a, C_b)`` (provably sufficient)."""
+        return self._binary(other, jr._slab_and, capacity)
+
+    def or_(self, other: SlabLike,
+            capacity: Optional[int] = None) -> "RoaringSlab":
+        """A ∪ B. Output capacity defaults to ``C_a + C_b`` (the key sets
+        may be disjoint); pass a tighter static ``capacity`` when known."""
+        return self._binary(other, jr._slab_or, capacity)
+
+    def xor(self, other: SlabLike,
+            capacity: Optional[int] = None) -> "RoaringSlab":
+        """A ⊕ B (symmetric difference)."""
+        return self._binary(other, jr._slab_xor, capacity)
+
+    def andnot(self, other: SlabLike,
+               capacity: Optional[int] = None) -> "RoaringSlab":
+        """A \\ B. Output capacity defaults to ``C_a``."""
+        return self._binary(other, jr._slab_andnot, capacity)
+
+    __and__ = and_
+    __or__ = or_
+    __xor__ = xor
+    __sub__ = andnot
+
+    def and_card(self, other: SlabLike) -> jax.Array:
+        """|A ∩ B| with no result slab (the fused-popcount fast path)."""
+        return _broadcast_map(
+            lambda a, b: jr._slab_and_card(_to_internal(a), _to_internal(b)),
+            [self, other])
+
+    def or_card(self, other: SlabLike) -> jax.Array:
+        """|A ∪ B| by inclusion-exclusion on the counters."""
+        return _broadcast_map(
+            lambda a, b: jr._slab_or_card(_to_internal(a), _to_internal(b)),
+            [self, other])
+
+    def jaccard(self, other: SlabLike) -> jax.Array:
+        """|A∩B| / |A∪B| in one dispatch pass (0 when both empty)."""
+        return _broadcast_map(
+            lambda a, b: jr._slab_jaccard(_to_internal(a), _to_internal(b)),
+            [self, other])
+
+    # -- internals ------------------------------------------------------------
+    def _require_single(self, what: str) -> None:
+        if self.ndim != 1:
+            raise ValueError(f"{what} needs a single slab (ndim == 1); "
+                             f"index a stacked slab first, e.g. s[i]")
+
+    def __repr__(self) -> str:
+        batch = "x".join(str(b) for b in self.batch_shape)
+        return (f"RoaringSlab(C={self.C}"
+                + (f", batch=[{batch}]" if batch else "") + ")")
+
+
+jax.tree_util.register_dataclass(
+    RoaringSlab,
+    data_fields=("keys", "kinds", "cards", "nruns", "payload"),
+    meta_fields=("C",))
+
+
+def stack(slabs: Sequence[SlabLike], capacity: Optional[int] = None,
+          align: bool = True) -> RoaringSlab:
+    """Stack N slabs into one batched ``RoaringSlab`` (leading axis N).
+
+    ``align=True`` (the wide-query layout, absorbing the old
+    ``index.SlabStack``): the merged key set over all N slabs is computed
+    once and every slab's rows are gathered key-aligned in native container
+    form, so wide combines are pure leading-axis reductions. ``capacity``
+    must cover the merged distinct key count (defaults to the sum of input
+    capacities). ``align=False`` stacks the raw arrays (same capacity
+    required) for elementwise-batched ops, which re-align per member.
+    """
+    if not slabs:
+        raise ValueError("stack needs at least one slab")
+    objs = [_as_object(s) for s in slabs]
+    if any(o.ndim != 1 for o in objs):
+        raise ValueError("stack expects single (ndim == 1) slabs")
+    if not align:
+        if capacity is not None and any(o.C != capacity for o in objs):
+            raise ValueError("align=False cannot change capacities")
+        if len({o.C for o in objs}) > 1:
+            raise ValueError("align=False needs equal-capacity slabs")
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *objs)
+    if capacity is None:
+        capacity = sum(o.C for o in objs)
+    keys = jr._merge_keys_many([o.keys for o in objs], capacity)
+    gathered = [jr._gather_raw(_to_internal(o), keys) for o in objs]
+    data = jnp.stack([g[0] for g in gathered])
+    card = jnp.stack([g[1] for g in gathered])
+    kind = jnp.stack([g[2] for g in gathered])
+    nruns = jnp.stack([jr._rows_nruns(g[0], g[2]) for g in gathered])
+    return RoaringSlab(
+        keys=jnp.broadcast_to(keys, (len(objs), capacity)),
+        kinds=kind, cards=card, nruns=nruns, payload=data, C=capacity)
+
+
+def _union_all_single(slabs: List[RoaringSlab],
+                      capacity: Optional[int]) -> RoaringSlab:
+    cap = capacity if capacity is not None else max(
+        1, sum(s.C for s in slabs))
+    return _wrap(jr.union_many_slabs([_to_internal(s) for s in slabs], cap))
+
+
+def union_all(slabs: Sequence[SlabLike],
+              capacity: Optional[int] = None) -> RoaringSlab:
+    """N-way union (Algorithm 4): the engine's log-depth tree reduction with
+    deferred cardinality and ONE canonicalization at the root.
+
+    ``slabs`` may be single slabs (returns a single slab) or equal-batch
+    stacked slabs (the reduction is vmapped over the batch axis — the mask
+    compiler's shape; ``capacity`` is then required and static).
+    """
+    slabs = [_as_object(s) for s in slabs]
+    if not slabs:
+        return RoaringSlab.empty(capacity or 1)
+    return _broadcast_map(
+        lambda *ss: _union_all_single(list(ss), capacity), slabs)
+
+
+def intersect_all(slabs: Sequence[SlabLike],
+                  capacity: Optional[int] = None) -> RoaringSlab:
+    """N-way intersection: log-depth tree of registry dispatch steps with a
+    single deferred canonicalization (batched like ``union_all``).
+
+    Alignment uses the *intersected* key set — only keys present in every
+    operand can populate the result, and there are at most ``min(C_i)`` of
+    them, so the default capacity is always sufficient (a union-key
+    alignment could silently truncate shared keys past the capacity).
+    """
+    slabs = [_as_object(s) for s in slabs]
+    if not slabs:
+        raise ValueError("intersect_all needs at least one slab")
+
+    def one(*ss: RoaringSlab) -> RoaringSlab:
+        cap = capacity if capacity is not None else min(s.C for s in ss)
+        keys = ss[0].keys
+        for s in ss[1:]:
+            pos = jnp.searchsorted(s.keys, keys)
+            pos_c = jnp.minimum(pos, s.C - 1)
+            hit = (s.keys[pos_c] == keys) & (keys != jr.KEY_SENTINEL)
+            keys = jnp.sort(jnp.where(hit, keys, jr.KEY_SENTINEL))
+        keys = jr._pad_keys(keys, cap)
+        gathered = [jr._gather_raw(_to_internal(s), keys) for s in ss]
+        data, card, kind = jr._tree_reduce_rows(
+            jnp.stack([g[0] for g in gathered]),
+            jnp.stack([g[1] for g in gathered]),
+            jnp.stack([g[2] for g in gathered]), jr._and_rows)
+        return _wrap(jr._finalize_rows(keys, data, card, kind))
+
+    return _broadcast_map(one, slabs)

@@ -75,72 +75,74 @@ class RoaringPageTable:
     def utilization(self) -> float:
         return 1.0 - len(self.free) / self.n_pages
 
-    # -- device-side views (jax_roaring hybrid dispatch) ----------------------
+    # -- device-side views (repro.roaring object API) --------------------------
     def _page_capacity(self) -> int:
-        from repro.core import jax_roaring as jr
-        return max(1, (self.n_pages + jr.CHUNK_SIZE - 1) // jr.CHUNK_SIZE)
+        from repro import roaring
+        return max(1, (self.n_pages + roaring.CHUNK_SIZE - 1)
+                   // roaring.CHUNK_SIZE)
 
     def free_slab(self):
-        """Free-page set as a device RoaringSlab (for jit-side allocators).
+        """Free-page set as a device ``roaring.RoaringSlab`` (for jit-side
+        allocators).
 
         Kind-preserving bridge: the free pool's run containers land as run
         rows directly — no per-page materialization, no bitmap round trip.
         """
-        from repro.core import jax_roaring as jr
-        return jr.from_roaring(self.free, self._page_capacity())
+        from repro.roaring import RoaringSlab
+        return RoaringSlab.from_roaring(self.free, self._page_capacity())
 
     def _seq_slab(self, pages):
         """One page list as a device slab (empty list -> empty slab)."""
-        from repro.core import jax_roaring as jr
+        from repro.roaring import RoaringSlab
         cap = self._page_capacity()
         if not pages:
-            return jr.empty(cap)
-        return jr.from_dense_array(np.asarray(pages, np.int64), cap,
-                                   len(pages))
+            return RoaringSlab.empty(cap)
+        return RoaringSlab.from_values(np.asarray(pages, np.int64), cap,
+                                       len(pages))
 
     def _seq_slabs(self):
         """Per-sequence page sets as device slabs (skips empty sequences)."""
         return [self._seq_slab(p) for p in self.seq_pages.values() if p]
 
     def used_slab(self):
-        """In-use pages as a device RoaringSlab — Alg. 4 as the query
+        """In-use pages as a device ``RoaringSlab`` — Alg. 4 as the query
         engine's log-depth tree reduction over per-sequence page slabs
         (kind-dispatching at every level, one deferred canonicalization);
         contiguously-allocated sequences union into run rows."""
-        from repro.core import jax_roaring as jr
+        from repro import roaring
         cap = self._page_capacity()
         slabs = self._seq_slabs()
         if not slabs:
-            return jr.empty(cap)
-        return jr.union_many_slabs(slabs, cap)
+            return roaring.RoaringSlab.empty(cap)
+        return roaring.union_all(slabs, capacity=cap)
 
     def rebuild_free_slab(self):
         """Recompute the free pool from scratch on device: the wide query
         ``all_pages ANDNOT (∪ per-seq pages)`` through the expression
         executor — a one-launch cross-check (and disaster-recovery rebuild)
         for the incrementally-maintained host ``free`` pool. Canonical
-        output: the fresh-pool case comes back as run rows."""
+        output: the fresh-pool case comes back as run rows. The operands are
+        attached as ``leaf(slab)`` nodes directly — no stack bookkeeping."""
         from repro import index
-        from repro.core import jax_roaring as jr
+        from repro.roaring import RoaringSlab
         cap = self._page_capacity()
-        full = jr.from_ranges([(0, self.n_pages)], cap)
+        full = RoaringSlab.from_ranges([(0, self.n_pages)], cap)
         slabs = self._seq_slabs()
         if not slabs:
-            return jr.slab_run_optimize(full)
-        stack = index.stack_from_slabs([full] + slabs, capacity=cap)
+            return full.run_optimize()
         expr = index.andnot(
-            index.leaf(0),
-            index.or_(*[index.leaf(i + 1) for i in range(len(slabs))]))
-        return index.execute(stack, expr)
+            index.leaf(full),
+            index.or_(*[index.leaf(s) for s in slabs]))
+        return index.execute(expr, capacity=cap)
 
     def shared_pages_many(self, seq_id: int, others: List[int]) -> np.ndarray:
         """|pages(seq_id) ∩ pages(o)| for many candidate sequences in ONE
         stacked dispatch launch (prefix-cache scan: which resident sequences
         share the most physical pages with ``seq_id``)."""
-        from repro import index
+        from repro import index, roaring
         if not others:
             return np.zeros((0,), np.int32)
-        stack = index.stack_from_slabs(
+        stack = roaring.stack(
             [self._seq_slab(self.seq_pages.get(o, [])) for o in others],
             capacity=self._page_capacity())
         return np.asarray(index.batched_and_card(
@@ -149,15 +151,15 @@ class RoaringPageTable:
     def shared_pages(self, seq_a: int, seq_b: int) -> int:
         """# physical pages two sequences share (prefix-cache diagnostics) via
         the cardinality-only dispatch fast path — no result set materialized."""
-        from repro.core import jax_roaring as jr
+        from repro.roaring import RoaringSlab
         cap = self._page_capacity()
-        sa = jr.from_dense_array(
+        sa = RoaringSlab.from_values(
             np.asarray(self.seq_pages.get(seq_a, []), np.int64), cap,
             self.n_pages)
-        sb = jr.from_dense_array(
+        sb = RoaringSlab.from_values(
             np.asarray(self.seq_pages.get(seq_b, []), np.int64), cap,
             self.n_pages)
-        return int(jr.slab_and_card(sa, sb))
+        return int(sa.and_card(sb))
 
     # -- kernel metadata -------------------------------------------------------
     def gather_lists(self, seq_ids: List[int], max_pages: int):

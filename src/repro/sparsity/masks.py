@@ -91,31 +91,28 @@ class MaskBuilder:
 
         Default routes through the batched query engine: every pattern's
         rows become one batched slab (kind-preserving — window/causal/doc
-        rows stay run rows), the engine's log-depth tree reduction merges
-        all patterns vmapped over the row axis in one launch, and the result
-        bridges back kind-for-kind via ``jax_roaring.to_roaring``.
-        ``capacity`` (containers per row) is derived from the largest block
-        id present when not given. ``device=False`` keeps the host
-        heap-union reference path; the two are bit-identical (tested in
-        tests/test_wide_ops.py).
+        rows stay run rows), ``roaring.union_all``'s log-depth tree
+        reduction merges all patterns vmapped over the row axis in one
+        launch, and the result bridges back kind-for-kind via
+        ``RoaringSlab.to_roaring``. ``capacity`` (containers per row) is
+        derived from the largest block id present when not given.
+        ``device=False`` keeps the host heap-union reference path; the two
+        are bit-identical (tested in tests/test_wide_ops.py).
         """
         if not device or not others:
             return MaskBuilder([
                 union_many([self.rows[i]] + [o.rows[i] for o in others])
                 for i in range(len(self.rows))])
-        import jax
-        from repro import index
-        from repro.core import jax_roaring as jr
+        from repro import roaring
 
         if capacity is None:
             capacity = 1 + max(
                 (r.keys[-1] for b in (self, *others) for r in b.rows
                  if r.keys), default=0)
         stacks = [rows_to_slabs(b.rows, capacity) for b in (self, *others)]
-        merged = index.union_many_batched(stacks, capacity=capacity)
-        return MaskBuilder([
-            jr.to_roaring(jax.tree.map(lambda x: x[r], merged))
-            for r in range(len(self.rows))])
+        merged = roaring.union_all(stacks, capacity=capacity)
+        return MaskBuilder([merged[r].to_roaring()
+                            for r in range(len(self.rows))])
 
     def intersect(self, other: "MaskBuilder") -> "MaskBuilder":
         return MaskBuilder([a & b for a, b in zip(self.rows, other.rows)])
@@ -159,41 +156,39 @@ def mask_density(kv_idx: np.ndarray, counts: np.ndarray) -> float:
 # =============================================================================
 
 def rows_to_slabs(rows: Sequence[RoaringBitmap], capacity: int = 2):
-    """Stack mask rows into a batched RoaringSlab (leading axis = row).
+    """Stack mask rows into a batched ``roaring.RoaringSlab`` (leading axis
+    = mask row).
 
     Block-id universes are small (< 2^16 for any practical block count), so
     each row is one container; the kind-preserving bridge keeps window /
     causal / doc rows as run rows (no per-block materialization), feeding
-    the run pair classes of the vmapped dispatch surfaces below.
+    the run pair classes of the batched object-API surfaces below. Rows are
+    stacked raw (``align=False``): elementwise-batched ops re-align per row.
     """
-    from repro.core import jax_roaring as jr
+    from repro import roaring
 
-    return jr.stack_slabs([jr.from_roaring(r, capacity) for r in rows])
+    return roaring.stack(
+        [roaring.RoaringSlab.from_roaring(r, capacity) for r in rows],
+        align=False)
 
 
 def mask_overlap_cards(m1: "MaskBuilder", m2: "MaskBuilder",
                        capacity: int = 2) -> np.ndarray:
     """Per-row |row1 ∩ row2| without materializing intersection masks — the
-    cardinality-only dispatch fast path, vmapped over rows. Useful for
+    cardinality-only dispatch fast path, batched over rows. Useful for
     quantifying how much two attention patterns share (e.g. how redundant a
     global stripe is with the local window)."""
-    import jax
-    from repro.core import jax_roaring as jr
-
     s1 = rows_to_slabs(m1.rows, capacity)
     s2 = rows_to_slabs(m2.rows, capacity)
-    return np.asarray(jax.vmap(jr.slab_and_card)(s1, s2))
+    return np.asarray(s1.and_card(s2))
 
 
 def mask_jaccard(m1: "MaskBuilder", m2: "MaskBuilder",
                  capacity: int = 2) -> np.ndarray:
     """Per-row Jaccard similarity of two mask patterns (one dispatch pass)."""
-    import jax
-    from repro.core import jax_roaring as jr
-
     s1 = rows_to_slabs(m1.rows, capacity)
     s2 = rows_to_slabs(m2.rows, capacity)
-    return np.asarray(jax.vmap(jr.slab_jaccard)(s1, s2))
+    return np.asarray(s1.jaccard(s2))
 
 
 def build_arch_mask(num_blocks: int, *, pattern: str, window_blocks: int = 8,

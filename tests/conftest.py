@@ -1,0 +1,17 @@
+"""Suite-wide configuration.
+
+``REPRO_STRICT_DEPRECATIONS=1`` turns any ``DeprecationWarning`` *raised
+from inside* ``repro.*`` modules into an error (the module field of a
+warnings filter matches the warning's caller, so test files may still
+exercise the deprecated ``slab_*`` shims directly — only ``src/`` callers
+fail). CI runs the suite once in this mode so no internal module silently
+keeps calling the deprecated tuple-threading API.
+"""
+
+import os
+
+
+def pytest_configure(config):
+    if os.environ.get("REPRO_STRICT_DEPRECATIONS"):
+        config.addinivalue_line(
+            "filterwarnings", r"error::DeprecationWarning:repro\.")

@@ -327,22 +327,22 @@ def test_kv_cache_free_slab_has_run_rows():
     pt = RoaringPageTable(n_pages=100_000, page_size=4)
     # fresh pool: one run per chunk, zero per-page materialization
     fs = pt.free_slab()
-    kinds = np.asarray(fs.kind)
+    kinds = np.asarray(fs.kinds)
     assert (kinds[np.asarray(fs.keys) != int(jr.KEY_SENTINEL)]
             == jr.KIND_RUN).all()
-    assert int(fs.cardinality) == 100_000
+    assert int(fs.card()) == 100_000
     pt.alloc(1, 400)                                 # 100 contiguous pages
     pt.alloc(2, 200)                                 # 50 more
     fs = pt.free_slab()
     us = pt.used_slab()
-    assert (np.asarray(fs.kind) == jr.KIND_RUN).any()
-    assert (np.asarray(us.kind) == jr.KIND_RUN).any()
-    assert int(fs.cardinality) == len(pt.free)
-    assert int(us.cardinality) == 150
+    assert (np.asarray(fs.kinds) == jr.KIND_RUN).any()
+    assert (np.asarray(us.kinds) == jr.KIND_RUN).any()
+    assert int(fs.card()) == len(pt.free)
+    assert int(us.card()) == 150
     # free AND used must be empty (the allocator never aliases)
-    assert int(jr.slab_and_card(fs, us)) == 0
+    assert int(fs.and_card(us)) == 0
     pt.release(1)
-    assert int(pt.free_slab().cardinality) == 100_000 - 50
+    assert int(pt.free_slab().card()) == 100_000 - 50
 
 
 def test_mask_slabs_have_run_rows():
@@ -356,7 +356,7 @@ def test_mask_slabs_have_run_rows():
     assert all(isinstance(c, RunContainer)
                for r in loc for c in r.containers if c.cardinality > 2)
     slabs = rows_to_slabs(loc)
-    kinds = np.asarray(slabs.kind)[:, 0]
+    kinds = np.asarray(slabs.kinds)[:, 0]
     assert (kinds == jr.KIND_RUN).sum() >= nb - 2
     cau = causal_mask(nb)
     doc = doc_boundary_mask(nb, [13, 40])

@@ -110,9 +110,9 @@ def test_page_table_device_views_and_sharing():
     pt = RoaringPageTable(n_pages=256, page_size=4)
     pt.alloc(1, 40)     # 10 pages
     pt.alloc(2, 20)     # 5 pages
-    assert int(pt.free_slab().cardinality) == len(pt.free)
-    assert int(pt.used_slab().cardinality) == 15
+    assert int(pt.free_slab().card()) == len(pt.free)
+    assert int(pt.used_slab().card()) == 15
     assert pt.shared_pages(1, 2) == 0            # allocator never aliases
     assert pt.shared_pages(1, 1) == 10           # self-overlap = page count
     pt.release(1)
-    assert int(pt.used_slab().cardinality) == 5
+    assert int(pt.used_slab().card()) == 5

@@ -184,7 +184,7 @@ def test_grad_compression_clustered_indices_use_bitmap_containers():
     g = np.zeros(300_000, np.float32)
     g[10_000:18_192] = np.random.default_rng(1).normal(size=8192) + 5
     c = compress_leaf(jnp.asarray(g), 8192)
-    kinds = np.asarray(c.slab_kind)
+    kinds = np.asarray(c.slab.kinds)
     assert (kinds == 2).sum() >= 1        # dense chunk -> bitmap container
     assert compression_ratio(c, g.size) < 0.06
 
