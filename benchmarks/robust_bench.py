@@ -1,0 +1,123 @@
+"""Robustness-tax benchmark: the hardened untrusted-input decode path vs the
+trusted fast path.
+
+Two A/B pairs over the same mixed 24-container stream:
+
+* ``robust/deserialize/*`` — the data-plane deserialize the serving system
+  actually runs on untrusted bytes: ``RoaringSlab.deserialize`` (hardened
+  codec + slab build) vs ``_deserialize_trusted`` + ``from_roaring``. The
+  derived column of ``robust/deserialize/validated`` is
+  ``trusted_us / validated_us``, gated in CI at >= 0.77 (full structural
+  validation may cost at most ~1.3x the trusted ingest).
+* ``robust/codec/*`` — the host codec alone, recorded for transparency but
+  not gated: the trusted decode is essentially one memcpy pass per payload,
+  while validation necessarily adds a second full pass (bitmap popcount,
+  array sortedness) plus reduce, so the codec-only ratio sits near ~0.5 at
+  these container sizes no matter how the checks are batched. The absolute
+  cost is a few microseconds per container — invisible once the payload
+  reaches the slab/device path measured above.
+"""
+
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+
+def _t(fn, repeats: int) -> float:
+    """Best-of-N wall time: the minimum is the least contention-biased
+    estimator for a deterministic CPU-bound function on a shared runner.
+    GC is disabled during timing (as ``timeit`` does): collection cost
+    scales with the whole process's live-object count, so in a long-lived
+    bench process it taxes whichever side allocates more temporaries by an
+    amount unrelated to the code under test."""
+    fn()
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+    finally:
+        if was_enabled:
+            gc.enable()
+
+
+def _workload_stream():
+    """A realistic mixed stream: arrays, bitmaps, and runs across 24 chunks
+    (large enough that decode cost dominates call overhead)."""
+    from repro.core import py_roaring as pr
+    from repro.roaring.format import RoaringFormatSpec
+
+    rng = np.random.default_rng(42)
+    vals = []
+    for hi in range(24):
+        mode = hi % 3
+        if mode == 0:                      # array
+            vals += [(hi << 16) + int(v)
+                     for v in rng.choice(65536, 1500, replace=False)]
+        elif mode == 1:                    # bitmap
+            vals += sorted(set(
+                (hi << 16 | rng.integers(0, 65536, 9000)).tolist()))
+        else:                              # runs
+            start = int(rng.integers(0, 30000))
+            vals += [(hi << 16) + v for v in range(start, start + 8000)]
+    rb = pr.RoaringBitmap.from_array(
+        np.asarray(sorted(set(vals)), np.uint64)).run_optimize()
+    return RoaringFormatSpec.serialize(rb)
+
+
+def run(quick: bool = False):
+    from repro.roaring import RoaringSlab
+    from repro.roaring.format import RoaringFormatSpec as FS
+
+    data = _workload_stream()
+    cap = len(FS._deserialize_trusted(data).keys)
+    repeats = 5 if quick else 12
+
+    def ingest_trusted():
+        return RoaringSlab.from_roaring(FS._deserialize_trusted(data),
+                                        capacity=cap)
+
+    def ingest_validated():
+        return RoaringSlab.deserialize(data, capacity=cap)
+
+    # each trial measures the A and B sides back to back (alternating order
+    # to kill drift/allocator bias across a long-lived bench process) and
+    # contributes one trusted/validated ratio; the derived column is the
+    # MEDIAN of the per-trial ratios, so a transient stall in any single
+    # measurement cannot fake (or hide) a robustness tax
+    us_ing_t, us_ing_v, us_codec_t, us_codec_v = [], [], [], []
+    codec_reps = repeats * 6                 # fast op: drown the timer
+    for trial in range(7):
+        pairs = [(us_ing_t, ingest_trusted, repeats),
+                 (us_ing_v, ingest_validated, repeats),
+                 (us_codec_t, lambda: FS._deserialize_trusted(data),
+                  codec_reps),
+                 (us_codec_v, lambda: FS.deserialize(data), codec_reps)]
+        if trial % 2:
+            pairs.reverse()
+        for acc, fn, reps in pairs:
+            acc.append(_t(fn, reps))
+
+    def med_ratio(a, b):
+        return float(np.median(np.asarray(a) / np.asarray(b)))
+
+    return [
+        ("robust/deserialize/trusted", round(min(us_ing_t), 1), ""),
+        ("robust/deserialize/validated", round(min(us_ing_v), 1),
+         round(med_ratio(us_ing_t, us_ing_v), 3)),
+        ("robust/codec/trusted", round(min(us_codec_t), 1), ""),
+        ("robust/codec/validated", round(min(us_codec_v), 1),
+         round(med_ratio(us_codec_t, us_codec_v), 3)),
+    ]
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -17,14 +17,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="reduced repeats")
     ap.add_argument("--sections", default="all",
                     help="comma list: fig2ab,fig2cd,fig2ef,tables,alg4,"
-                         "dispatch,compressruns,kernels,jax")
+                         "dispatch,compressruns,kernels,jax,robust")
     args = ap.parse_args()
 
     from . import paper_figures as pf
 
     sections = args.sections.split(",") if args.sections != "all" else [
         "fig2ab", "fig2cd", "fig2ef", "tables", "alg4", "dispatch",
-        "compressruns", "kernels", "jax"]
+        "compressruns", "kernels", "jax", "robust"]
     rows = []
 
     def run(name, fn):
@@ -58,6 +58,14 @@ def main() -> None:
             rows.extend(jax_bench.run(quick=args.quick))
         except ImportError:
             print("# jax section unavailable", file=sys.stderr)
+
+    if "robust" in sections:
+        try:
+            from . import robust_bench
+            print("# --- robust ---", file=sys.stderr, flush=True)
+            rows.extend(robust_bench.run(quick=args.quick))
+        except ImportError:
+            print("# robust section unavailable", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, t, d in rows:

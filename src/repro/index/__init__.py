@@ -18,10 +18,11 @@ Consumers: ``serve.kv_cache`` pool rebuilds, ``sparsity.masks`` pattern
 unions, and ``grad_comp`` leaf-overlap scans.
 """
 
-from repro.index.engine import (And, AndNot, Expr, Leaf, Or, SlabLeaf, and_,
-                                andnot, batched_and_card,
-                                batched_and_card_sharded, execute,
-                                execute_card, leaf, or_, topk_by_card,
+from repro.index.engine import (And, AndNot, DegradationStats, Expr, Leaf, Or,
+                                SlabLeaf, and_, andnot, batched_and_card,
+                                batched_and_card_sharded, degradation_stats,
+                                execute, execute_card, leaf, or_,
+                                reset_degradation, topk_by_card,
                                 topk_by_card_sharded, union_many_batched,
                                 wide_intersect, wide_union)
 from repro.index.stack import SlabStack, stack_from_slabs
@@ -34,4 +35,5 @@ __all__ = [
     "batched_and_card", "batched_and_card_sharded",
     "topk_by_card", "topk_by_card_sharded",
     "union_many_batched",
+    "DegradationStats", "degradation_stats", "reset_degradation",
 ]

@@ -33,6 +33,7 @@ jit-/vmap-compatible; expression shapes are static Python.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
@@ -48,6 +49,7 @@ __all__ = [
     "batched_and_card", "batched_and_card_sharded",
     "topk_by_card", "topk_by_card_sharded",
     "union_many_batched",
+    "DegradationStats", "degradation_stats", "reset_degradation",
 ]
 
 
@@ -227,8 +229,88 @@ def _normalize(stack, expr):
     return stack, expr
 
 
+# =============================================================================
+# graceful degradation: the Pallas -> XLA-ref fallback ladder
+# =============================================================================
+
+@dataclasses.dataclass
+class DegradationStats:
+    """Counters for the query engine's failure ladder: how many dispatch
+    attempts failed, how many retries the preferred backend got, and how
+    many queries completed degraded on the XLA reference backend."""
+
+    dispatch_failures: int = 0
+    retries: int = 0
+    fallbacks: int = 0
+
+    def snapshot(self) -> "DegradationStats":
+        return DegradationStats(self.dispatch_failures, self.retries,
+                                self.fallbacks)
+
+    def reset(self) -> None:
+        self.dispatch_failures = 0
+        self.retries = 0
+        self.fallbacks = 0
+
+
+_DEGRADATION = DegradationStats()
+
+# failure classes the ladder absorbs: injected faults and device/runtime
+# errors (preemption, OOM, ICI failures surface as XlaRuntimeError, a
+# JaxRuntimeError subclass; RuntimeError covers interpret-mode lowering
+# failures). Shape/type/user errors (ValueError, IndexError, ...) propagate
+# untouched — degrading cannot fix a malformed query.
+_FALLBACK_ERRORS = (RuntimeError, jax.errors.JaxRuntimeError)
+
+
+def degradation_stats() -> DegradationStats:
+    """A snapshot of the engine-wide degradation counters."""
+    return _DEGRADATION.snapshot()
+
+
+def reset_degradation() -> None:
+    """Zero the engine-wide degradation counters (test isolation)."""
+    _DEGRADATION.reset()
+
+
+def _run_degradable(fn, backend: Optional[str], max_retries: int,
+                    backoff_s: float):
+    """Run ``fn`` with the Pallas->XLA-ref fallback ladder.
+
+    ``backend=None``/"auto" resolves to the hardware default. A preferred
+    non-"xla" backend gets ``max_retries`` retries with exponential backoff;
+    when they are exhausted the query degrades to the XLA reference backend
+    (bit-identical math, counted in ``degradation_stats().fallbacks``). A
+    failure on "xla" itself propagates — there is nothing left to degrade
+    to.
+    """
+    from repro.kernels.roaring import ops as _kops
+
+    preferred = backend or _kops.current_backend()
+    if preferred == "xla":
+        with _kops.backend_scope("xla"):
+            return fn()
+    last: Optional[BaseException] = None
+    for attempt in range(max_retries + 1):
+        try:
+            with _kops.backend_scope(preferred):
+                return fn()
+        except _FALLBACK_ERRORS as e:
+            _DEGRADATION.dispatch_failures += 1
+            last = e
+            if attempt < max_retries:
+                _DEGRADATION.retries += 1
+                if backoff_s > 0:
+                    time.sleep(backoff_s * (2 ** attempt))
+    _DEGRADATION.fallbacks += 1
+    with _kops.backend_scope("xla"):
+        return fn()
+
+
 def execute(stack: Optional[RoaringSlab], expr: Optional[Expr] = None,
-            capacity: Optional[int] = None) -> RoaringSlab:
+            capacity: Optional[int] = None, *,
+            backend: Optional[str] = None, max_retries: int = 1,
+            backoff_s: float = 0.0) -> RoaringSlab:
     """Evaluate ``expr`` over the stacked slab -> canonical ``RoaringSlab``.
 
     One deferred best-of-three canonicalization at the root; output is
@@ -237,23 +319,40 @@ def execute(stack: Optional[RoaringSlab], expr: Optional[Expr] = None,
     ``None`` (or omitted) when every leaf is a ``leaf(slab)`` — the shared
     key row is then the merged key set of the slab leaves (``capacity``
     bounds it, defaulting to the sum of leaf capacities).
+
+    ``backend`` picks the dispatch backend ("pallas" / "xla" / None=auto).
+    Dispatch failures on a non-"xla" backend (real device faults or a
+    ``runtime.fault_tolerance.FaultPlan``) retry ``max_retries`` times with
+    exponential backoff, then degrade to the XLA reference backend — same
+    math, bit-identical result — incrementing ``degradation_stats()``.
     """
     stack, expr = _normalize(stack, expr)
     keys = _shared_keys(stack, expr, capacity)
-    data, card, kind = _eval(stack, keys, expr)
-    return _wrap(jr._finalize_rows(keys, data, card, kind))
+
+    def attempt() -> RoaringSlab:
+        data, card, kind = _eval(stack, keys, expr)
+        return _wrap(jr._finalize_rows(keys, data, card, kind))
+
+    return _run_degradable(attempt, backend, max_retries, backoff_s)
 
 
 def execute_card(stack: Optional[RoaringSlab],
                  expr: Optional[Expr] = None,
-                 capacity: Optional[int] = None) -> jax.Array:
+                 capacity: Optional[int] = None, *,
+                 backend: Optional[str] = None, max_retries: int = 1,
+                 backoff_s: float = 0.0) -> jax.Array:
     """|expr| without materializing a result slab — every combine level
     already maintains exact per-row cardinalities (fused popcounts on the
-    bitmap-domain paths), so the root's counter sum is the answer."""
+    bitmap-domain paths), so the root's counter sum is the answer. Runs the
+    same degradation ladder as ``execute``."""
     stack, expr = _normalize(stack, expr)
     keys = _shared_keys(stack, expr, capacity)
-    _, card, _ = _eval(stack, keys, expr)
-    return jnp.sum(card)
+
+    def attempt() -> jax.Array:
+        _, card, _ = _eval(stack, keys, expr)
+        return jnp.sum(card)
+
+    return _run_degradable(attempt, backend, max_retries, backoff_s)
 
 
 def wide_union(stack: RoaringSlab) -> RoaringSlab:

@@ -3,11 +3,33 @@
 ``use_pallas=None`` auto-selects: the Pallas body targets TPU; on CPU (this
 container) it runs in interpret mode inside tests, while jitted production
 entry points fall back to the XLA reference formulation (same math).
+
+Robustness hooks (PR 6): the public entry points are thin Python wrappers
+over the jitted implementations, so two per-launch controls exist without
+retracing —
+
+* ``backend_scope("pallas" | "xla" | "auto")`` overrides the backend for
+  every dispatch launched inside the ``with`` block whose caller did not
+  pass an explicit ``use_pallas``/``interpret``; ``repro.index.execute``
+  uses it to run its Pallas→XLA-ref degradation ladder without threading a
+  flag through the whole row-state algebra;
+* ``set_fault_hook(fn)`` installs a callable invoked with the resolved
+  backend name (``"pallas"``/``"xla"``) before every kernel launch — the
+  injectable-failure seam ``runtime.fault_tolerance.FaultPlan`` plugs into
+  (raising there simulates a device/runtime failure at dispatch
+  granularity). The hook fires at Python call time; inside an outer ``jit``
+  trace that means once per trace, matching where a real lowering failure
+  would surface.
+
+Explicit ``use_pallas``/``interpret`` arguments always win over the scope
+override, so tests pinning a backend stay pinned.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,31 +42,98 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("op", "use_pallas", "interpret"))
-def container_op(a_bits, b_bits, kinds, op: str = "or",
-                 use_pallas: bool | None = None, interpret: bool = False):
-    """Batched fused container op + popcount over key-aligned rows."""
-    if use_pallas is None:
+# -- per-launch controls ------------------------------------------------------
+_BACKEND_OVERRIDE: Optional[str] = None       # None == "auto"
+_FAULT_HOOK: Optional[Callable[[str], None]] = None
+
+
+@contextlib.contextmanager
+def backend_scope(backend: Optional[str]):
+    """Scoped backend override for auto-selecting dispatch launches.
+
+    ``"pallas"`` forces the Pallas body (interpret mode off-TPU), ``"xla"``
+    forces the XLA reference, ``"auto"``/``None`` restores hardware
+    auto-selection. Nests; restores the previous override on exit.
+    """
+    global _BACKEND_OVERRIDE
+    if backend not in (None, "auto", "pallas", "xla"):
+        raise ValueError(f"unknown roaring backend {backend!r} "
+                         "(want 'pallas', 'xla', or 'auto')")
+    prev = _BACKEND_OVERRIDE
+    _BACKEND_OVERRIDE = None if backend == "auto" else backend
+    try:
+        yield
+    finally:
+        _BACKEND_OVERRIDE = prev
+
+
+def current_backend() -> str:
+    """The backend an auto-selecting launch would use right now."""
+    if _BACKEND_OVERRIDE is not None:
+        return _BACKEND_OVERRIDE
+    return "pallas" if _on_tpu() else "xla"
+
+
+def set_fault_hook(hook: Optional[Callable[[str], None]]):
+    """Install (or clear, with ``None``) the per-launch fault hook; returns
+    the previous hook so callers can restore it."""
+    global _FAULT_HOOK
+    prev = _FAULT_HOOK
+    _FAULT_HOOK = hook
+    return prev
+
+
+def _resolve(use_pallas: Optional[bool], interpret: bool) -> tuple:
+    """Resolve (use_pallas, interpret) to concrete booleans: explicit args
+    win, then the scope override, then hardware auto-selection — and fire
+    the fault hook with the resolved backend name."""
+    if use_pallas is None and not interpret:
+        use_pallas = current_backend() == "pallas"
+    elif use_pallas is None:
         use_pallas = _on_tpu()
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK("pallas" if (use_pallas or interpret) else "xla")
+    return use_pallas, interpret
+
+
+@functools.partial(jax.jit, static_argnames=("op", "use_pallas", "interpret"))
+def _container_op(a_bits, b_bits, kinds, op, use_pallas, interpret):
     if use_pallas or interpret:
         return _k.container_op_pallas(a_bits, b_bits, kinds, op,
                                       interpret=not _on_tpu())
     return _ref.container_op_ref(a_bits, b_bits, kinds, op)
 
 
+def container_op(a_bits, b_bits, kinds, op: str = "or",
+                 use_pallas: bool | None = None, interpret: bool = False):
+    """Batched fused container op + popcount over key-aligned rows."""
+    use_pallas, interpret = _resolve(use_pallas, interpret)
+    return _container_op(a_bits, b_bits, kinds, op, use_pallas, interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def array_intersect(a_arr, b_arr, cards,
-                    use_pallas: bool | None = None, interpret: bool = False):
-    """Batched array-container intersection (vectorized galloping)."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+def _array_intersect(a_arr, b_arr, cards, use_pallas, interpret):
     if use_pallas or interpret:
         return _k.array_intersect_pallas(a_arr, b_arr, cards,
                                          interpret=not _on_tpu())
     return _ref.array_intersect_ref(a_arr, b_arr, cards)
 
 
+def array_intersect(a_arr, b_arr, cards,
+                    use_pallas: bool | None = None, interpret: bool = False):
+    """Batched array-container intersection (vectorized galloping)."""
+    use_pallas, interpret = _resolve(use_pallas, interpret)
+    return _array_intersect(a_arr, b_arr, cards, use_pallas, interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _intersect_dispatch(a_data, b_data, meta, use_pallas, interpret):
+    if use_pallas or interpret:
+        return _k.intersect_dispatch_pallas(a_data, b_data, meta,
+                                            interpret=not _on_tpu())
+    return _ref.intersect_dispatch_ref(a_data, b_data, meta)
+
+
 def intersect_dispatch(a_data, b_data, meta,
                        use_pallas: bool | None = None,
                        interpret: bool = False):
@@ -57,15 +146,22 @@ def intersect_dispatch(a_data, b_data, meta,
     compacts / lazily canonicalizes best-of-three on top of this. Pallas
     (``@pl.when`` skip) on TPU, XLA reference elsewhere.
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas or interpret:
-        return _k.intersect_dispatch_pallas(a_data, b_data, meta,
-                                            interpret=not _on_tpu())
-    return _ref.intersect_dispatch_ref(a_data, b_data, meta)
+    use_pallas, interpret = _resolve(use_pallas, interpret)
+    return _intersect_dispatch(a_data, b_data, meta, use_pallas, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _intersect_dispatch_stacked(a_data, b_data, meta, use_pallas, interpret):
+    if use_pallas or interpret:
+        return _k.intersect_dispatch_stacked_pallas(a_data, b_data, meta,
+                                                    interpret=not _on_tpu())
+    N, C = a_data.shape[0], a_data.shape[1]
+    hits, card = _ref.intersect_dispatch_ref(
+        a_data.reshape(N * C, a_data.shape[2]),
+        b_data.reshape(N * C, b_data.shape[2]), meta.reshape(-1))
+    return hits.reshape(N, C, a_data.shape[2]), card.reshape(N, C)
+
+
 def intersect_dispatch_stacked(a_data, b_data, meta,
                                use_pallas: bool | None = None,
                                interpret: bool = False):
@@ -78,13 +174,6 @@ def intersect_dispatch_stacked(a_data, b_data, meta,
     (hits u16[N, C, 4096], card i32[N, C]) with the same per-pair-class
     semantics as ``intersect_dispatch``.
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas or interpret:
-        return _k.intersect_dispatch_stacked_pallas(a_data, b_data, meta,
-                                                    interpret=not _on_tpu())
-    N, C = a_data.shape[0], a_data.shape[1]
-    hits, card = _ref.intersect_dispatch_ref(
-        a_data.reshape(N * C, a_data.shape[2]),
-        b_data.reshape(N * C, b_data.shape[2]), meta.reshape(-1))
-    return hits.reshape(N, C, a_data.shape[2]), card.reshape(N, C)
+    use_pallas, interpret = _resolve(use_pallas, interpret)
+    return _intersect_dispatch_stacked(a_data, b_data, meta, use_pallas,
+                                       interpret)

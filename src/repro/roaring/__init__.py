@@ -10,17 +10,32 @@ the portable serialization codec behind ``RoaringSlab.serialize`` /
 
 The old ``repro.core.jax_roaring.slab_*`` free functions still work but are
 deprecated shims over the same engine — see ``docs/MIGRATION.md``.
+
+``deserialize`` treats byte streams as untrusted: structural violations
+raise ``RoaringFormatError`` (with byte-offset context) and ``DecodeLimits``
+caps what a hostile stream may allocate. ``repro.roaring.validate`` is the
+invariant auditor over host bitmaps, device slabs, and the serving page
+table.
 """
 
 from repro.core.jax_roaring import (ARRAY_MAX, CHUNK_BITS, CHUNK_SIZE,
                                     KEY_SENTINEL, KIND_ARRAY, KIND_BITMAP,
                                     KIND_EMPTY, KIND_RUN, MAX_RUNS, ROW_WORDS)
-from repro.roaring.format import RoaringFormatSpec
+from repro.roaring import validate
+from repro.roaring.format import (DecodeLimits, RoaringFormatError,
+                                  RoaringFormatSpec)
 from repro.roaring.slab import (RoaringSlab, intersect_all, stack, union_all)
+from repro.roaring.validate import (AuditReport, InvariantViolation,
+                                    Violation, audit_bitmap,
+                                    audit_page_table, audit_slab)
 
 __all__ = [
     "RoaringSlab", "RoaringFormatSpec",
     "stack", "union_all", "intersect_all",
+    # robustness surface: hardened-codec errors + the invariant auditor
+    "RoaringFormatError", "DecodeLimits", "validate",
+    "AuditReport", "Violation", "InvariantViolation",
+    "audit_bitmap", "audit_slab", "audit_page_table",
     # layout constants re-exported for consumers inspecting .kinds / .keys
     "CHUNK_BITS", "CHUNK_SIZE", "ARRAY_MAX", "ROW_WORDS", "MAX_RUNS",
     "KEY_SENTINEL", "KIND_EMPTY", "KIND_ARRAY", "KIND_BITMAP", "KIND_RUN",

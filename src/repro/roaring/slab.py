@@ -154,10 +154,17 @@ class RoaringSlab:
         return _wrap(jr.from_dense_array(values, capacity, max_elems))
 
     @classmethod
-    def from_roaring(cls, rb, capacity: int) -> "RoaringSlab":
+    def from_roaring(cls, rb, capacity: int, *,
+                     check: bool = False) -> "RoaringSlab":
         """Host ``py_roaring.RoaringBitmap`` -> slab, kind-preserving (run
-        containers land as run rows, nothing materialized)."""
-        return _wrap(jr.from_roaring(rb, capacity))
+        containers land as run rows, nothing materialized). ``check=True``
+        audits the built slab (``repro.roaring.validate``) and raises
+        ``InvariantViolation`` on any structural breach."""
+        slab = _wrap(jr.from_roaring(rb, capacity))
+        if check:
+            from repro.roaring import validate as _v
+            _v.audit_slab(slab).raise_on_violation()
+        return slab
 
     @classmethod
     def from_ranges(cls, ranges: Iterable[Tuple[int, int]],
@@ -166,15 +173,23 @@ class RoaringSlab:
         return _wrap(jr.from_ranges(ranges, capacity))
 
     @classmethod
-    def deserialize(cls, data: bytes,
-                    capacity: Optional[int] = None) -> "RoaringSlab":
-        """Portable Roaring byte stream -> slab (host-side; see
-        ``RoaringFormatSpec``). ``capacity`` defaults to the container
-        count in the stream."""
-        rb = RoaringFormatSpec.deserialize(data)
+    def deserialize(cls, data: bytes, capacity: Optional[int] = None, *,
+                    limits=None, check: bool = False) -> "RoaringSlab":
+        """Untrusted portable Roaring byte stream -> slab (host-side; see
+        ``RoaringFormatSpec``). ``capacity`` defaults to the container count
+        in the stream. Structural stream validation always runs (any breach
+        raises ``RoaringFormatError`` with byte-offset context; ``limits``
+        caps container count / stream bytes); ``check=True`` additionally
+        audits both the decoded host bitmap and the built device slab."""
+        rb = RoaringFormatSpec.deserialize(data, limits=limits, check=check)
         if capacity is None:
             capacity = max(1, len(rb.keys))
-        return cls.from_roaring(rb, capacity)
+        elif capacity < len(rb.keys):
+            from repro.roaring.format import DecodeLimitError
+            raise DecodeLimitError(
+                f"stream holds {len(rb.keys)} containers, caller capacity "
+                f"is {capacity}")
+        return cls.from_roaring(rb, capacity, check=check)
 
     # -- exporters ------------------------------------------------------------
     def to_roaring(self):

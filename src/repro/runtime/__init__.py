@@ -1,6 +1,8 @@
-from .fault_tolerance import (ResilientTrainer, HeartbeatMonitor,
-                              StragglerPolicy, simulate_failure)
+from .fault_tolerance import (FaultPlan, HeartbeatMonitor, InjectedFault,
+                              ResilientTrainer, StragglerPolicy, fault_scope,
+                              simulate_failure)
 from .elastic import elastic_remesh, reshard_tree
 
 __all__ = ["ResilientTrainer", "HeartbeatMonitor", "StragglerPolicy",
-           "simulate_failure", "elastic_remesh", "reshard_tree"]
+           "simulate_failure", "elastic_remesh", "reshard_tree",
+           "FaultPlan", "InjectedFault", "fault_scope"]

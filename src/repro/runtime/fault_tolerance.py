@@ -116,3 +116,74 @@ def simulate_failure(at_steps: set[int], exc: type = RuntimeError):
             fired.add(step)
             raise exc(f"injected failure at step {step}")
     return src
+
+
+# =============================================================================
+# dispatch-granularity fault injection for the roaring data plane
+# =============================================================================
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``FaultPlan`` in place of a real device/runtime failure
+    (the XlaRuntimeError class preemption and ICI faults surface as)."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Injectable kernel-dispatch failures for the roaring query engine.
+
+    The query-path mirror of ``ResilientTrainer``'s ``failure_source``: a
+    plan counts every kernel launch on the targeted ``backend`` and raises
+    ``exc`` on the chosen ones, so tests (and chaos drills) can prove the
+    Pallas→XLA-ref degradation ladder in ``repro.index.execute`` returns
+    bit-identical results under dispatch failures.
+
+    ``fail_on`` names 0-based dispatch indices to fail; ``every`` fails each
+    N-th dispatch instead; ``max_failures`` caps total injections (None =
+    unlimited). ``dispatches``/``failures`` are live counters.
+    """
+
+    fail_on: frozenset = frozenset()
+    every: Optional[int] = None
+    backend: str = "pallas"
+    exc: type = InjectedFault
+    max_failures: Optional[int] = None
+    dispatches: int = 0
+    failures: int = 0
+
+    def on_dispatch(self, backend: str) -> None:
+        """The ``kernels.roaring.ops`` fault-hook entry point."""
+        if backend != self.backend:
+            return
+        i = self.dispatches
+        self.dispatches += 1
+        if self.max_failures is not None and self.failures >= self.max_failures:
+            return
+        hit = i in self.fail_on or (
+            self.every is not None and (i + 1) % self.every == 0)
+        if hit:
+            self.failures += 1
+            raise self.exc(
+                f"injected {self.backend} fault at dispatch {i}")
+
+
+class fault_scope:
+    """Context manager installing a ``FaultPlan`` as the roaring dispatch
+    fault hook (``kernels.roaring.ops.set_fault_hook``); restores the
+    previous hook on exit.
+
+    >>> with fault_scope(FaultPlan(fail_on=frozenset({0}))):
+    ...     out = index.execute(stack, expr, backend="pallas")
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._prev = None
+
+    def __enter__(self) -> FaultPlan:
+        from repro.kernels.roaring import ops as _kops
+        self._prev = _kops.set_fault_hook(self.plan.on_dispatch)
+        return self.plan
+
+    def __exit__(self, *exc) -> None:
+        from repro.kernels.roaring import ops as _kops
+        _kops.set_fault_hook(self._prev)

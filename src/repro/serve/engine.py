@@ -9,6 +9,15 @@ sequences, returning their pages via Roaring OR into the free bitmap.
 Prefill is chunk-free token-streaming through the same decode path (adequate
 for the test scale; the 32k-prefill *shape* cells lower the one-shot
 ``forward`` path instead — see launch.dryrun).
+
+Admission backpressure (PR 6): page-pool exhaustion during prefill or decode
+does not crash the engine. The starved request is evicted — its pages
+(including any partial allocation) go back to the pool via
+``RoaringPageTable.release`` — and requeued at the head of the queue to be
+re-admitted once a resident sequence retires (``requeues`` counts these).
+Only when *no other sequence holds pages* (the request alone cannot ever
+fit) does the original ``MemoryError`` propagate. ``table.audit()`` proves
+no page leaks on any path.
 """
 
 from __future__ import annotations
@@ -59,10 +68,31 @@ class ServeEngine:
                 params, pools, tok, pos, pidx, cnt, lens, cfg))
         self.greedy = greedy
         self.steps_run = 0
+        self.requeues = 0
 
     def submit(self, req: Request) -> None:
         req.generated = []
         self.queue.append(req)
+
+    def _others_hold_pages(self, rid: int) -> bool:
+        """True when any *other* sequence holds pages — i.e. eviction +
+        retry can eventually succeed; False means the pool alone is too
+        small for this request and requeueing would spin forever."""
+        return any(s != rid and pages
+                   for s, pages in self.table.seq_pages.items())
+
+    def _evict_requeue(self, slot: int) -> None:
+        """Backpressure: push the starved sequence out of its slot, return
+        every page it holds (partial allocations included), and requeue it
+        from scratch at the head of the queue."""
+        rid = self.slots[slot]
+        req = self.active.pop(rid)
+        self.table.release(rid)
+        self.slots[slot] = None
+        self.pos.pop(rid, None)
+        req.generated = []
+        self.requeues += 1
+        self.queue.insert(0, req)
 
     def _admit(self) -> None:
         for i in range(self.max_batch):
@@ -76,8 +106,14 @@ class ServeEngine:
             if rid is None:
                 continue
             req = self.active[rid]
-            while self.pos[rid] < len(req.prompt) - 1:
-                self._advance(i, int(req.prompt[self.pos[rid]]), sample=False)
+            try:
+                while self.pos[rid] < len(req.prompt) - 1:
+                    self._advance(i, int(req.prompt[self.pos[rid]]),
+                                  sample=False)
+            except MemoryError:
+                if not self._others_hold_pages(rid):
+                    raise          # can never fit: pool < one request
+                self._evict_requeue(i)
 
     def _batch_arrays(self):
         B = self.max_batch
@@ -126,7 +162,13 @@ class ServeEngine:
             req = self.active[rid]
             nxt_in = (int(req.prompt[-1]) if not req.generated
                       else req.generated[-1])
-            out = self._advance(i, nxt_in, sample=True)
+            try:
+                out = self._advance(i, nxt_in, sample=True)
+            except MemoryError:
+                if not self._others_hold_pages(rid):
+                    raise          # can never fit: pool < one request
+                self._evict_requeue(i)
+                continue
             req.generated.append(out)
             if (len(req.generated) >= req.max_new_tokens
                     or out == req.eos_id):

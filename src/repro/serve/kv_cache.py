@@ -75,6 +75,14 @@ class RoaringPageTable:
     def utilization(self) -> float:
         return 1.0 - len(self.free) / self.n_pages
 
+    def audit(self):
+        """Structural audit of the allocator (``repro.roaring.validate``):
+        free/used partition exactly covers [0, n_pages) with no leaked,
+        double-allocated, or duplicated pages, and per-sequence page counts
+        cover ``seq_len``. Returns the machine-readable ``AuditReport``."""
+        from repro.roaring import validate as _v
+        return _v.audit_page_table(self)
+
     # -- device-side views (repro.roaring object API) --------------------------
     def _page_capacity(self) -> int:
         from repro import roaring

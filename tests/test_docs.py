@@ -29,10 +29,11 @@ def test_api_doc_covers_all_exports():
     import repro.index as ix
     import repro.kernels.roaring.dispatch as D
     import repro.roaring as roaring
+    import repro.roaring.validate as V
 
     text = (ROOT / "docs" / "API.md").read_text()
     documented = _api_symbols(text)
-    for mod in (roaring, core, jr, D, ix):
+    for mod in (roaring, core, jr, D, ix, V):
         missing = [s for s in mod.__all__ if s not in documented]
         assert not missing, (mod.__name__, missing)
 
@@ -44,7 +45,7 @@ def test_api_doc_symbols_exist():
 
     text = (ROOT / "docs" / "API.md").read_text()
     mods = {
-        "repro.roaring": None,
+        "repro.roaring": None, "repro.roaring.validate": None,
         "repro.core": None, "repro.core.jax_roaring": None,
         "repro.kernels.roaring.dispatch": None, "repro.index": None,
         "repro.kernels.roaring.ops": None,

@@ -1,0 +1,217 @@
+"""Graceful degradation under injected faults.
+
+Two planes:
+
+  * the query engine — a ``runtime.fault_tolerance.FaultPlan`` makes the
+    Pallas dispatch path raise at chosen launches; ``index.execute`` must
+    retry, then degrade to the XLA reference backend and return a
+    **bit-identical** result while ``degradation_stats()`` records the
+    ladder;
+  * the serving engine — a starved KV page pool must requeue requests
+    instead of crashing, finish everything once pages free up, and leak
+    zero pages (proved by the roaring page-table auditor).
+"""
+
+import numpy as np
+import pytest
+
+from repro import index
+from repro.roaring import RoaringSlab
+from repro.runtime import FaultPlan, InjectedFault, fault_scope
+from repro.kernels.roaring import ops as kops
+
+
+@pytest.fixture(autouse=True)
+def _reset_stats():
+    index.reset_degradation()
+    yield
+    index.reset_degradation()
+
+
+def _slabs():
+    rng = np.random.default_rng(0)
+    out = []
+    for _ in range(3):
+        vals = np.unique(rng.integers(0, 200000, 5000)).astype(np.uint32)
+        out.append(RoaringSlab.from_values(vals, capacity=8, max_elems=8192))
+    return out
+
+
+def _expr(slabs):
+    return index.and_(index.leaf(slabs[0]),
+                      index.or_(index.leaf(slabs[1]), index.leaf(slabs[2])))
+
+
+def _arr(slab):
+    return slab.to_roaring().to_array()
+
+
+# =============================================================================
+# query-engine ladder
+# =============================================================================
+
+def test_execute_degrades_to_xla_bit_identical():
+    slabs = _slabs()
+    expr = _expr(slabs)
+    base = _arr(index.execute(expr, backend="xla"))
+    assert index.degradation_stats().fallbacks == 0
+
+    # every pallas dispatch fails -> retry also fails -> degrade to XLA-ref
+    with fault_scope(FaultPlan(every=1, backend="pallas")) as plan:
+        out = index.execute(expr, backend="pallas", max_retries=1)
+    assert np.array_equal(_arr(out), base)
+    s = index.degradation_stats()
+    assert s.fallbacks == 1
+    assert s.retries == 1
+    assert s.dispatch_failures == 2          # first try + one retry
+    assert plan.dispatches == 2 and plan.failures == 2
+
+
+def test_execute_retry_recovers_without_fallback():
+    slabs = _slabs()
+    expr = _expr(slabs)
+    base = _arr(index.execute(expr, backend="xla"))
+    index.reset_degradation()
+
+    # only the very first dispatch fails: the retry succeeds on pallas
+    with fault_scope(FaultPlan(fail_on=frozenset({0}), backend="pallas")):
+        out = index.execute(expr, backend="pallas", max_retries=2)
+    assert np.array_equal(_arr(out), base)
+    s = index.degradation_stats()
+    assert s.fallbacks == 0 and s.retries == 1 and s.dispatch_failures == 1
+
+
+def test_execute_card_runs_same_ladder():
+    slabs = _slabs()
+    expr = _expr(slabs)
+    base = int(index.execute_card(expr, backend="xla"))
+    index.reset_degradation()
+    with fault_scope(FaultPlan(every=1, backend="pallas")):
+        card = int(index.execute_card(expr, backend="pallas", max_retries=0))
+    assert card == base
+    assert index.degradation_stats().fallbacks == 1
+
+
+def test_xla_failure_propagates():
+    """The bottom rung has nothing to degrade to."""
+    slabs = _slabs()
+    with fault_scope(FaultPlan(every=1, backend="xla")):
+        with pytest.raises(InjectedFault):
+            index.execute(_expr(slabs), backend="xla")
+
+
+def test_value_errors_do_not_degrade():
+    """Shape/user errors must propagate, not silently fall back."""
+    with pytest.raises(TypeError):
+        index.execute(None, None)
+    assert index.degradation_stats().fallbacks == 0
+
+
+def test_fault_plan_scoping_restores_hook():
+    plan = FaultPlan(every=1, backend="pallas")
+    prev = kops.set_fault_hook(None)
+    try:
+        with fault_scope(plan):
+            pass
+        assert kops.set_fault_hook(None) is None    # hook restored
+    finally:
+        kops.set_fault_hook(prev)
+
+
+def test_backend_scope_nesting():
+    with kops.backend_scope("xla"):
+        assert kops.current_backend() == "xla"
+        with kops.backend_scope("pallas"):
+            assert kops.current_backend() == "pallas"
+        assert kops.current_backend() == "xla"
+    with pytest.raises(ValueError):
+        with kops.backend_scope("tpu-v9"):
+            pass
+
+
+def test_fault_plan_max_failures():
+    plan = FaultPlan(every=1, backend="pallas", max_failures=1)
+    with pytest.raises(InjectedFault):
+        plan.on_dispatch("pallas")
+    plan.on_dispatch("pallas")               # cap reached: no more raises
+    plan.on_dispatch("xla")                  # other backend: ignored
+    assert plan.failures == 1 and plan.dispatches == 2
+
+
+# =============================================================================
+# serving engine under page exhaustion
+# =============================================================================
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("stablelm-1.6b", reduced=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_serve_engine_requeues_under_page_exhaustion(tiny_model):
+    """A pool too small for the whole batch: the engine must requeue starved
+    requests (not crash), finish ALL of them, and leak zero pages."""
+    from repro.serve import Request, ServeEngine
+    cfg, params = tiny_model
+    # 3 requests x (4 prompt + 6 new) = 10 tokens -> 3 pages each; the
+    # 4-page pool fits roughly one sequence at a time
+    eng = ServeEngine(cfg, params, max_batch=3, n_pages=4, page_size=4,
+                      max_pages_per_seq=4)
+    rng = np.random.default_rng(1)
+    reqs = [Request(req_id=r,
+                    prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                    max_new_tokens=6) for r in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_steps=300)
+
+    assert eng.requeues > 0                  # backpressure actually engaged
+    assert not eng.queue and not eng.active
+    assert all(r.done and len(r.generated) == 6 for r in reqs)
+    report = eng.table.audit()               # zero leaked pages
+    assert report.ok, report.summary()
+    assert eng.utilization() == 0.0
+
+
+def test_serve_engine_impossible_request_raises(tiny_model):
+    """A single request larger than the entire pool can never fit: the
+    engine must surface MemoryError (not requeue-spin forever) and still
+    account for every page."""
+    from repro.serve import Request, ServeEngine
+    cfg, params = tiny_model
+    eng = ServeEngine(cfg, params, max_batch=2, n_pages=2, page_size=4,
+                      max_pages_per_seq=8)
+    rng = np.random.default_rng(2)
+    eng.submit(Request(req_id=9,
+                       prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                       max_new_tokens=16))
+    with pytest.raises(MemoryError):
+        eng.run_until_done(max_steps=50)
+    assert eng.table.audit().ok
+
+
+def test_page_table_audit_flags_synthetic_leak():
+    """The auditor itself: fabricate a leak / double-alloc and watch it
+    report machine-readable violations."""
+    from repro.serve import RoaringPageTable
+    t = RoaringPageTable(n_pages=8, page_size=4)
+    t.alloc(1, 8)                            # pages {0, 1}
+    assert t.audit().ok
+
+    # leak: drop a page from the seq list without returning it
+    leaked = t.seq_pages[1].pop()
+    rep = t.audit()
+    assert any(v.code == "page-leak" for v in rep.violations)
+    t.seq_pages[1].append(leaked)
+
+    # double-alloc: hand the same page to two sequences
+    t.alloc(2, 4)
+    t.seq_pages[2][0] = t.seq_pages[1][0]
+    rep = t.audit()
+    assert not rep.ok
+    assert any(v.code in ("page-double-alloc", "page-leak")
+               for v in rep.violations)

@@ -1,0 +1,400 @@
+"""Hardened-codec robustness tests: untrusted portable streams.
+
+The contract under test (``repro.roaring.format``): for any byte string,
+``RoaringFormatSpec.deserialize`` either returns a bitmap that re-serializes
+byte-identically, or raises a ``RoaringFormatError`` subclass carrying
+byte-offset context — never a bare numpy/struct error, never a silent wrong
+answer. Golden fixtures under ``tests/corpus/`` pin the wire format
+byte-for-byte.
+"""
+
+import struct
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import py_roaring as pr
+from repro.roaring import (DecodeLimits, RoaringFormatError, RoaringSlab,
+                           validate)
+from repro.roaring.format import (CookieError, DecodeLimitError,
+                                  DescriptiveHeaderError, OffsetHeaderError,
+                                  PayloadError, RoaringFormatSpec,
+                                  TrailingDataError, TruncatedStreamError)
+
+CORPUS = Path(__file__).parent / "corpus"
+FS = RoaringFormatSpec
+
+
+def rb_of(vals):
+    rb = pr.RoaringBitmap.from_array(
+        np.asarray(sorted(set(vals)), np.uint64))
+    return rb.run_optimize()              # canonical best-of-three kinds
+
+
+def golden_sets():
+    """The exact value sets behind tests/corpus/golden_*.bin (committed
+    byte-for-byte; regenerate only on a deliberate format change)."""
+    rng = np.random.default_rng(0xC0FFEE)
+    out = {}
+    out["golden_array"] = list(range(0, 2000, 3))
+    out["golden_bitmap"] = sorted(set(rng.integers(0, 65536, 9000).tolist()))
+    out["golden_run"] = list(range(100, 5000))
+    mixed = []
+    mixed += [0x00000 + v for v in range(0, 1200, 2)]
+    mixed += sorted(set((0x10000 + rng.integers(0, 65536, 9000)).tolist()))
+    mixed += [0x20000 + v for v in range(50, 6000)]
+    mixed += [0x30000 + v for v in (1, 5, 9, 400, 60000)]
+    out["golden_mixed"] = mixed
+    norun = []
+    for hi in range(5):
+        if hi == 2:
+            norun += sorted(
+                set((hi << 16 | rng.integers(0, 65536, 8000)).tolist()))
+        else:
+            norun += [(hi << 16) + int(v)
+                      for v in rng.choice(65536, 300, replace=False)]
+    out["golden_norun"] = norun
+    return out
+
+
+# =============================================================================
+# golden interop fixtures
+# =============================================================================
+
+@pytest.mark.parametrize("name", ["golden_array", "golden_bitmap",
+                                  "golden_run", "golden_mixed",
+                                  "golden_norun"])
+def test_golden_byte_exact(name):
+    """serialize reproduces the committed fixture byte-for-byte, and
+    deserialize + audit accepts it."""
+    data = (CORPUS / f"{name}.bin").read_bytes()
+    rb = rb_of(golden_sets()[name])
+    assert FS.serialize(rb) == data
+    back = FS.deserialize(data, check=True)
+    assert np.array_equal(back.to_array(), rb.to_array())
+    assert FS.serialize(back) == data
+    assert validate.audit_bitmap(back, canonical=True).ok
+    # trusted fast path agrees with the hardened path on valid input
+    trusted = FS._deserialize_trusted(data)
+    assert np.array_equal(trusted.to_array(), rb.to_array())
+    # device round trip under audit
+    slab = RoaringSlab.deserialize(data, check=True)
+    assert slab.serialize() == data
+
+
+# =============================================================================
+# truncation at every boundary, every container type
+# =============================================================================
+
+@pytest.mark.parametrize("name", ["golden_array", "golden_bitmap",
+                                  "golden_run", "golden_mixed",
+                                  "golden_norun"])
+def test_every_prefix_raises_format_error(name):
+    """EVERY proper prefix of a valid stream must raise RoaringFormatError
+    (a truncation can never decode silently); dense sweep near the front
+    (cookie / run bitset / descriptive header / offset header), strided
+    through the payloads, dense at the tail."""
+    data = (CORPUS / f"{name}.bin").read_bytes()
+    front = range(0, min(64, len(data)))
+    mid = range(64, max(64, len(data) - 16), 97)
+    tail = range(max(0, len(data) - 16), len(data))
+    for ln in list(front) + list(mid) + list(tail):
+        with pytest.raises(RoaringFormatError) as ei:
+            FS.deserialize(data[:ln])
+        # byte-offset context, not a bare numpy ValueError
+        assert ei.value.offset is not None
+        assert 0 <= ei.value.offset <= len(data)
+
+
+def test_truncation_offsets_name_the_failing_section():
+    """Cutting inside a specific stream section reports an offset inside
+    (or at the end of) the bytes we kept."""
+    data = (CORPUS / "golden_mixed.bin").read_bytes()
+    # run-flag bitset: bytes [4, 5) for 4 containers
+    with pytest.raises(TruncatedStreamError) as ei:
+        FS.deserialize(data[:4])
+    assert ei.value.offset == 4
+    # descriptive header for 4 containers: [5, 21)
+    with pytest.raises(TruncatedStreamError) as ei:
+        FS.deserialize(data[:7])
+    assert ei.value.offset == 5
+    # offset header (present: n >= 4 with runs): [21, 37)
+    with pytest.raises(TruncatedStreamError) as ei:
+        FS.deserialize(data[:22])
+    assert ei.value.offset == 21
+    # mid-payload of the first (array) container
+    with pytest.raises(TruncatedStreamError) as ei:
+        FS.deserialize(data[:40])
+    assert ei.value.container == 0
+    assert ei.value.offset == 37
+
+
+def test_truncation_mid_payload_every_kind():
+    """Cut mid-payload in each container type; error carries the container
+    index."""
+    cases = {
+        "golden_array": (16, 0),     # offsets end at 8+4+4=16 (1 container)
+        "golden_bitmap": (16, 0),
+        "golden_run": (9, 0),        # cookie 4 + bitset 1 + desc 4 (no offs)
+    }
+    for name, (payload_start, cont) in cases.items():
+        data = (CORPUS / f"{name}.bin").read_bytes()
+        cut = payload_start + (len(data) - payload_start) // 2
+        with pytest.raises(TruncatedStreamError) as ei:
+            FS.deserialize(data[:cut])
+        assert ei.value.container == cont
+        # the reported offset is where the failing payload read started
+        # (for runs: the pair block after the u16 run count)
+        assert payload_start <= ei.value.offset <= cut
+
+
+# =============================================================================
+# structural lies
+# =============================================================================
+
+def _run_stream(pairs, card, key=0):
+    """Hand-build a 1-run-container stream (no offset header: n=1 < 4)."""
+    return (struct.pack("<I", 12347) + b"\x01"
+            + struct.pack("<HH", key, card - 1)
+            + struct.pack("<H", len(pairs))
+            + b"".join(struct.pack("<HH", s, l) for s, l in pairs))
+
+
+def test_run_pair_out_of_range():
+    with pytest.raises(PayloadError):
+        FS.deserialize(_run_stream([(65500, 199)], card=200))
+
+
+def test_run_pairs_unsorted_or_overlapping():
+    with pytest.raises(PayloadError):      # out of order
+        FS.deserialize(_run_stream([(100, 9), (0, 9)], card=20))
+    with pytest.raises(PayloadError):      # overlapping / adjacent-merged
+        FS.deserialize(_run_stream([(0, 9), (5, 9)], card=20))
+
+
+def test_run_cardinality_lie():
+    with pytest.raises(PayloadError):
+        FS.deserialize(_run_stream([(0, 9)], card=11))
+
+
+def test_run_count_zero_or_over_max():
+    bad = (struct.pack("<I", 12347) + b"\x01" + struct.pack("<HH", 0, 9)
+           + struct.pack("<H", 0))
+    with pytest.raises(PayloadError):
+        FS.deserialize(bad)
+    bad = (struct.pack("<I", 12347) + b"\x01" + struct.pack("<HH", 0, 9)
+           + struct.pack("<H", 3000))
+    with pytest.raises(PayloadError):
+        FS.deserialize(bad)
+
+
+def test_keys_must_be_sorted_unique():
+    # raw from_array (no run_optimize): two array containers, no-run cookie,
+    # so the descriptive header sits at byte 8
+    rb = pr.RoaringBitmap.from_array(
+        np.asarray([1, 5, 9, 0x10000 + 5, 0x10000 + 9], np.uint64))
+    data = bytearray(FS.serialize(rb))
+    # no-run stream: desc header at 8; swap the two keys (u16 at 8 and 12)
+    data[8:10], data[12:14] = data[12:14], data[8:10]
+    with pytest.raises(DescriptiveHeaderError):
+        FS.deserialize(bytes(data))
+    # duplicate keys
+    data = bytearray(FS.serialize(rb))
+    data[12:14] = data[8:10]
+    with pytest.raises(DescriptiveHeaderError):
+        FS.deserialize(bytes(data))
+
+
+def test_offset_header_verified_not_skipped():
+    data = bytearray((CORPUS / "golden_norun.bin").read_bytes())
+    # first offset entry is at byte 8 + 4*n_desc; n=5 -> 28
+    data[28] ^= 0x02
+    with pytest.raises(OffsetHeaderError) as ei:
+        FS.deserialize(bytes(data))
+    assert ei.value.container == 0
+
+
+def test_bitmap_cardinality_lie():
+    data = bytearray((CORPUS / "golden_bitmap.bin").read_bytes())
+    data[10] ^= 0xFF                      # card-1 low byte in desc header
+    with pytest.raises((PayloadError, OffsetHeaderError)):
+        FS.deserialize(bytes(data))
+
+
+def test_array_values_must_be_sorted():
+    data = bytearray((CORPUS / "golden_array.bin").read_bytes())
+    # payload starts at 16; swap first two u16 values
+    data[16:18], data[18:20] = data[18:20], data[16:18]
+    with pytest.raises(PayloadError):
+        FS.deserialize(bytes(data))
+
+
+def test_many_runs_vectorized_path():
+    """>= 32 runs takes the numpy fast pass; violations still fall through
+    to the Python walk for exact-offset errors."""
+    pairs = [(i * 100, 9) for i in range(64)]          # 64 runs of length 10
+    data = _run_stream(pairs, card=640)
+    rb = FS.deserialize(data)
+    assert FS.serialize(rb) == data
+
+    bad = list(pairs)
+    bad[40] = (bad[39][0], 9)                          # overlaps run 39
+    with pytest.raises(PayloadError) as ei:
+        FS.deserialize(_run_stream(bad, card=640))
+    # 1-container run stream: payload at 9, pairs at 11, run j at 11 + 4j
+    assert ei.value.container == 0 and ei.value.offset == 11 + 4 * 40
+
+    oor = [(i * 100, 9) for i in range(63)] + [(65500, 199)]
+    with pytest.raises(PayloadError):                  # 65500+199 > 65535
+        FS.deserialize(_run_stream(oor, card=63 * 10 + 200))
+    with pytest.raises(PayloadError):                  # cardinality lie
+        FS.deserialize(_run_stream(pairs, card=641))
+
+
+def test_many_arrays_batched_check():
+    """> 12 array containers exercise the batched reduceat sortedness pass
+    (including its exact-locate fallback on corruption)."""
+    rng = np.random.default_rng(3)
+    vals = [(hi << 16) + int(v) for hi in range(16)
+            for v in rng.choice(65536, 500, replace=False)]
+    rb = pr.RoaringBitmap.from_array(np.asarray(sorted(vals), np.uint64))
+    data = FS.serialize(rb)
+    assert FS.serialize(FS.deserialize(data)) == data
+
+    # cookie+count 8 + desc 4*16 + offsets 4*16 = 136; container 10's
+    # payload at 136 + 10*1000; swapping its first two (distinct, sorted)
+    # values makes value[1] < value[0]
+    buf = bytearray(data)
+    p = 136 + 10 * 1000
+    buf[p:p + 2], buf[p + 2:p + 4] = buf[p + 2:p + 4], buf[p:p + 2]
+    with pytest.raises(PayloadError) as ei:
+        FS.deserialize(bytes(buf))
+    assert ei.value.container == 10 and ei.value.offset == p + 2
+
+
+def test_batched_check_catches_full_wraparound_step():
+    """Adversarial case for the wraparound diff-sum identity: a corrupted
+    step of exactly -65535 (65535 -> 0) makes the per-step term 0, and only
+    the segment-sum identity rejects it."""
+    vals = [(hi << 16) + v for hi in range(16) for v in (0, 65535)]
+    rb = pr.RoaringBitmap.from_array(np.asarray(vals, np.uint64))
+    data = FS.serialize(rb)
+    assert FS.serialize(FS.deserialize(data)) == data
+
+    buf = bytearray(data)
+    p = 136 + 5 * 4                       # container 5 payload: [0, 65535]
+    buf[p:p + 2], buf[p + 2:p + 4] = buf[p + 2:p + 4], buf[p:p + 2]
+    with pytest.raises(PayloadError) as ei:
+        FS.deserialize(bytes(buf))
+    assert ei.value.container == 5
+
+
+def test_trailing_bytes_rejected():
+    data = (CORPUS / "golden_array.bin").read_bytes()
+    with pytest.raises(TrailingDataError):
+        FS.deserialize(data + b"\x00")
+
+
+def test_bad_cookie():
+    with pytest.raises(CookieError):
+        FS.deserialize(b"\x99\x99\x00\x00")
+
+
+def test_empty_run_bitset_rejected():
+    """A run-cookie stream whose bitset flags zero runs would re-serialize
+    under the no-run cookie — reject it to keep accepted => byte-identical
+    round trip."""
+    nr = FS.serialize(rb_of(range(0, 100, 2)))
+    evil = struct.pack("<I", 12347) + b"\x00" + nr[12:]
+    with pytest.raises(CookieError):
+        FS.deserialize(evil)
+
+
+def test_empty_input():
+    with pytest.raises(TruncatedStreamError):
+        FS.deserialize(b"")
+
+
+# =============================================================================
+# decode limits
+# =============================================================================
+
+def test_decode_limits():
+    data = (CORPUS / "golden_mixed.bin").read_bytes()   # 4 containers
+    with pytest.raises(DecodeLimitError):
+        FS.deserialize(data, limits=DecodeLimits(max_containers=3))
+    with pytest.raises(DecodeLimitError):
+        FS.deserialize(data, limits=DecodeLimits(max_stream_bytes=64))
+    # generous limits accept
+    FS.deserialize(data, limits=DecodeLimits(max_containers=4))
+    with pytest.raises(ValueError):
+        DecodeLimits(max_containers=0)
+
+
+def test_header_claims_more_containers_than_stream_holds():
+    """A hostile header count must fail bounds checks, not allocate."""
+    evil = struct.pack("<II", 12346, 1 << 16)
+    with pytest.raises(RoaringFormatError):
+        FS.deserialize(evil)
+    with pytest.raises(DecodeLimitError):
+        FS.deserialize(evil, limits=DecodeLimits(max_containers=8))
+
+
+def test_slab_deserialize_capacity_guard():
+    data = (CORPUS / "golden_mixed.bin").read_bytes()   # 4 containers
+    with pytest.raises(DecodeLimitError):
+        RoaringSlab.deserialize(data, capacity=2)
+    slab = RoaringSlab.deserialize(data, capacity=8, check=True)
+    assert slab.serialize() == data
+
+
+# =============================================================================
+# the invariant auditor
+# =============================================================================
+
+def test_audit_clean_structures():
+    rb = rb_of(list(range(0, 2000, 3)) + list(range(70000, 80000)))
+    assert validate.audit_bitmap(rb, canonical=True).ok
+    slab = RoaringSlab.from_roaring(rb, capacity=4, check=True)
+    rep = validate.audit_slab(slab, canonical=True)
+    assert rep.ok, rep.summary()
+
+
+def test_audit_catches_card_lie():
+    rb = rb_of(np.arange(0, 65536, 2))    # bitmap container
+    assert isinstance(rb.containers[0], pr.BitmapContainer)
+    rb.containers[0].cardinality = 99     # corrupt the tracked counter
+    rep = validate.audit_bitmap(rb)
+    assert not rep.ok
+    assert any(v.code == "card-mismatch" for v in rep.violations)
+    with pytest.raises(validate.InvariantViolation):
+        rep.raise_on_violation()
+
+
+def test_audit_catches_key_disorder():
+    rb = rb_of([1, 0x10000 + 1])
+    rb.keys = rb.keys[::-1].copy()
+    rep = validate.audit_bitmap(rb)
+    assert any(v.code == "key-order" for v in rep.violations)
+
+
+def test_audit_report_is_machine_readable():
+    rb = rb_of(np.arange(0, 65536, 2))
+    rb.containers[0].cardinality = 42
+    rep = validate.audit_bitmap(rb)
+    v = rep.violations[0]
+    assert isinstance(v.code, str) and isinstance(v.container, int)
+    assert isinstance(rep.summary(), str)
+
+
+# =============================================================================
+# regression corpus (streams that previously mattered)
+# =============================================================================
+
+def test_regression_corpus_all_rejected():
+    files = sorted((CORPUS / "regressions").glob("*.bin"))
+    assert files, "regression corpus missing"
+    for f in files:
+        with pytest.raises(RoaringFormatError):
+            FS.deserialize(f.read_bytes())

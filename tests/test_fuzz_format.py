@@ -1,0 +1,158 @@
+"""Differential byte-mutation fuzzing of the hardened portable codec.
+
+Property under test, for EVERY input byte string:
+
+  * ``RoaringFormatSpec.deserialize`` either returns a bitmap or raises a
+    ``RoaringFormatError`` subclass — no bare numpy/struct/overflow errors,
+    no hangs, no unbounded allocation;
+  * when it returns, the result re-serializes **byte-identically** (the
+    stream was genuinely canonical) and agrees with the ``py_roaring``
+    oracle: decoding, pushing through the device slab path, and coming back
+    yields the exact same value set;
+  * the structural auditor finds nothing wrong with any accepted decode.
+
+Mutators: truncation, random byte flips, splices between streams, targeted
+header lies (cookie / key / cardinality / offset / run-count fields), and
+trailing garbage. The loop is a seeded ``np.random.Generator`` (hypothesis
+is not in the image; the shim in ``_hypothesis_compat`` caps examples far
+below the required volume), so every run covers the same >= 500 mutated
+streams. ``REPRO_FUZZ_EXAMPLES`` scales the volume up for soak runs.
+"""
+
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import py_roaring as pr
+from repro.roaring import DecodeLimits, RoaringFormatError, RoaringSlab, validate
+from repro.roaring.format import RoaringFormatSpec as FS
+
+CORPUS = Path(__file__).parent / "corpus"
+
+# >= 500 mutated streams per acceptance criteria; env-scalable for soak runs
+N_EXAMPLES = max(500, int(os.environ.get("REPRO_FUZZ_EXAMPLES", "500")))
+LIMITS = DecodeLimits(max_containers=1 << 12, max_stream_bytes=1 << 22)
+
+
+def _seed_streams():
+    """Valid streams covering all container kinds and header shapes."""
+    rng = np.random.default_rng(0x5EED)
+    sets = [
+        [],                                           # empty bitmap
+        [0],
+        list(range(0, 2000, 3)),                      # array
+        sorted(set(rng.integers(0, 65536, 9000).tolist())),   # bitmap
+        list(range(100, 5000)),                       # run
+        list(range(0, 66)) + [100, 200, 300],         # short run + tail
+        # 4 mixed containers -> run cookie WITH offset header
+        ([v for v in range(0, 1200, 2)]
+         + sorted(set((0x10000 + rng.integers(0, 65536, 9000)).tolist()))
+         + [0x20000 + v for v in range(50, 6000)]
+         + [0x30000 + v for v in (1, 5, 9)]),
+        # 5 containers no runs -> no-run cookie + offsets
+        [(hi << 16) + int(v) for hi in range(5)
+         for v in rng.choice(65536, 200, replace=False)],
+    ]
+    out = []
+    for vals in sets:
+        rb = pr.RoaringBitmap.from_array(
+            np.asarray(sorted(set(vals)), np.uint64)).run_optimize()
+        out.append(FS.serialize(rb))
+    return out
+
+
+def _mutate(data: bytes, rng: np.random.Generator, pool) -> bytes:
+    """One mutation step: truncate / bitflip / splice / header-lie /
+    trailing garbage (occasionally stacked)."""
+    buf = bytearray(data)
+    kind = rng.integers(0, 6)
+    if kind == 0 and len(buf) > 0:                     # truncate
+        buf = buf[: rng.integers(0, len(buf))]
+    elif kind == 1 and len(buf) > 0:                   # bitflips
+        for _ in range(int(rng.integers(1, 8))):
+            i = int(rng.integers(0, len(buf)))
+            buf[i] ^= 1 << int(rng.integers(0, 8))
+    elif kind == 2:                                    # splice two streams
+        other = pool[int(rng.integers(0, len(pool)))]
+        if len(buf) and len(other):
+            cut_a = int(rng.integers(0, len(buf)))
+            cut_b = int(rng.integers(0, len(other)))
+            buf = buf[:cut_a] + bytearray(other[cut_b:])
+    elif kind == 3 and len(buf) >= 16:                 # header-field lie
+        i = int(rng.integers(0, min(64, len(buf))))    # cookie/desc/offsets
+        buf[i] = int(rng.integers(0, 256))
+    elif kind == 4:                                    # trailing garbage
+        buf += bytes(rng.integers(0, 256, int(rng.integers(1, 9)),
+                                  dtype=np.uint8))
+    else:                                              # random byte blob
+        buf = bytearray(bytes(rng.integers(
+            0, 256, int(rng.integers(0, 64)), dtype=np.uint8)))
+    return bytes(buf)
+
+
+def _check_one(data: bytes) -> str:
+    """The fuzz property for a single input. Returns the outcome tag."""
+    try:
+        rb = FS.deserialize(data, limits=LIMITS)
+    except RoaringFormatError:
+        return "rejected"                   # typed rejection: always fine
+    # accepted: must be canonical — byte-identical round trip...
+    again = FS.serialize(rb)
+    assert again == data, "accepted stream did not re-serialize identically"
+    # ...structurally clean...
+    rep = validate.audit_bitmap(rb)
+    assert rep.ok, rep.summary()
+    # ...and bit-identical through the device slab path (differential)
+    vals = rb.to_array()
+    slab = RoaringSlab.from_roaring(rb, capacity=max(1, len(rb.keys)))
+    assert np.array_equal(slab.to_roaring().to_array(), vals)
+    return "accepted"
+
+
+def test_fuzz_mutated_streams_never_crash():
+    """>= N_EXAMPLES mutated streams: every outcome is a typed rejection or
+    a verified bit-identical accept — zero uncaught exceptions."""
+    seeds = _seed_streams()
+    rng = np.random.default_rng(0xF0220)
+    outcomes = {"accepted": 0, "rejected": 0}
+    for i in range(N_EXAMPLES):
+        base = seeds[i % len(seeds)]
+        data = _mutate(base, rng, seeds)
+        if rng.integers(0, 4) == 0:         # stack a second mutation
+            data = _mutate(data, rng, seeds)
+        outcomes[_check_one(data)] += 1
+    # sanity on coverage: the mutator must exercise both outcomes (random
+    # mutation rarely stays canonical, so accepts are scarce by nature —
+    # the unmutated-seed test below pins the accept path exhaustively)
+    assert outcomes["rejected"] >= 50, outcomes
+    assert outcomes["accepted"] >= 1, outcomes
+
+
+def test_fuzz_pure_garbage():
+    """Purely random blobs (no valid scaffold) are all rejected cleanly."""
+    rng = np.random.default_rng(0xBAD)
+    for _ in range(200):
+        n = int(rng.integers(0, 128))
+        blob = bytes(rng.integers(0, 256, n, dtype=np.uint8))
+        try:
+            rb = FS.deserialize(blob, limits=LIMITS)
+            assert FS.serialize(rb) == blob
+        except RoaringFormatError:
+            pass
+
+
+def test_fuzz_valid_streams_always_accepted():
+    """The mutator scaffolds themselves (unmutated) round-trip."""
+    for data in _seed_streams():
+        assert _check_one(data) == "accepted"
+
+
+def test_regression_corpus_replayed_through_fuzz_property():
+    """Every committed regression stream satisfies the fuzz property (they
+    are all rejections today; the property, not the outcome, is pinned)."""
+    files = sorted((CORPUS / "regressions").glob("*.bin"))
+    assert files, "regression corpus missing"
+    for f in files:
+        _check_one(f.read_bytes())
