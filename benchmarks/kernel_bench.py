@@ -198,6 +198,90 @@ def wide_ab(quick: bool = False):
     return rows
 
 
+def fused_ab(quick: bool = False):
+    """A/B: the fused single-launch tree evaluator (PR 7) vs the per-op
+    tree-reduce executor, on the same jitted ``index.execute`` queries.
+
+    Wide AND trees use the overlapping-operand regime (each slab keeps ~97%
+    of a shared base set — see ``wide_ab``); OR trees run the run-heavy
+    consumer regime from ``synth``; the mixed shape is ANDNOT-of-OR over
+    sparse operands. The derived column is per_op/fused (within one run on
+    one machine); ``benchmarks/compare.py`` gates the floors: 1.5x at
+    N >= 16 for the AND/ANDNOT regimes (the fused acceptance bar), 1.0x
+    narrow, and no-regression parity (0.9) for the run-heavy union rows,
+    where both paths are bound by the same per-leaf lifts and root
+    finalize so the ~1.1-1.7x win sits inside timer noise of 1.0.
+    """
+    import functools as _ft
+
+    import jax
+    from repro import index, roaring
+    from repro.core import RoaringBitmap, jax_roaring as jr
+    from .synth import gen_run_ranges, gen_set
+
+    rows = []
+    rng = np.random.default_rng(23)
+    C = 8
+    repeats = 2 if quick else 4
+    sizes = [4, 16] if quick else [4, 16, 64]
+
+    def ab(name, stack, expr, repeats=repeats):
+        f_po = jax.jit(_ft.partial(
+            lambda s, e: index.execute(s, e), e=expr))
+        f_fu = jax.jit(_ft.partial(
+            lambda s, e: index.execute(s, e, fused=True), e=expr))
+        assert int(f_po(stack).card()) == int(f_fu(stack).card())
+        us_po = _t(lambda: f_po(stack), repeats)
+        us_fu = _t(lambda: f_fu(stack), repeats)
+        rows.append((f"fused/{name}/per_op", round(us_po, 1), ""))
+        rows.append((f"fused/{name}/fused_tree", round(us_fu, 1),
+                     round(us_po / max(us_fu, 1e-9), 2)))
+        f_poc = jax.jit(_ft.partial(
+            lambda s, e: index.execute_card(s, e), e=expr))
+        f_fuc = jax.jit(_ft.partial(
+            lambda s, e: index.execute_card(s, e, fused=True), e=expr))
+        us_poc = _t(lambda: f_poc(stack), repeats)
+        us_fuc = _t(lambda: f_fuc(stack), repeats)
+        rows.append((f"fused/{name}/card_fused", round(us_fuc, 1),
+                     round(us_poc / max(us_fuc, 1e-9), 2)))
+
+    # --- AND-heavy: N conjunctive filters over a shared base set -------------
+    base = np.unique(rng.integers(0, C << 16, 60_000))
+    for N in sizes:
+        slabs = [roaring.RoaringSlab.from_values(
+            base[rng.random(base.size) > 0.03], C, 1 << 17)
+            for _ in range(N)]
+        stack = roaring.stack(slabs, capacity=C)
+        ab(f"and_n{N}", stack,
+           index.and_(*[index.leaf(i) for i in range(N)]))
+
+    # --- OR-heavy: run-heavy operands (the union/consumer regime) ------------
+    for N in sizes:
+        slabs = [roaring.RoaringSlab.from_roaring(
+            RoaringBitmap.from_ranges(gen_run_ranges(
+                0.15, 40.0, 30 + i, int(0.15 * (C << 16)))), C)
+            for i in range(N)]
+        stack = roaring.stack(slabs, capacity=C)
+        ab(f"or_runs_n{N}", stack,
+           index.or_(*[index.leaf(i) for i in range(N)]))
+
+    # --- mixed ANDNOT over sparse operands -----------------------------------
+    # (or of N/2 sparse slabs) \ (or of N/2 sparse slabs): array containers
+    # end to end, the regime where per-op compaction overhead dominates
+    for N in [16] if quick else [16, 64]:
+        slabs = [roaring.RoaringSlab.from_values(
+            gen_set(2.0 ** -6, "uniform", seed=50 + i,
+                    n=int(2.0 ** -6 * (C << 16))), C, 1 << 17)
+            for i in range(N)]
+        stack = roaring.stack(slabs, capacity=C)
+        half = N // 2
+        expr = index.andnot(
+            index.or_(*[index.leaf(i) for i in range(half)]),
+            index.or_(*[index.leaf(i) for i in range(half, N)]))
+        ab(f"andnot_sparse_n{N}", stack, expr)
+    return rows
+
+
 def api_ab(quick: bool = False):
     """A/B: the ``repro.roaring`` object API vs the raw row-state path.
 

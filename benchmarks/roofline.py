@@ -1,5 +1,6 @@
 """Roofline report: artifacts/dryrun/*.json -> markdown tables + hillclimb
-cell selection.
+cell selection, plus an analytic fused-vs-per-op launch/traffic model for
+the PR 7 mega-kernel (``--fused`` section, no dryrun artifacts needed).
 
     PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
 """
@@ -62,17 +63,51 @@ def pick_hillclimb(recs):
     return worst, most_coll, (paper[0] if paper else recs[-1]["cell"])
 
 
+def fused_model(n_containers: int = 64):
+    """Analytic launch-count / HBM-traffic table for the fused tree
+    evaluator vs the per-op pipeline, straight from ``fused.plan_stats``
+    (the same model the scheduler uses). Per-op re-materialises every
+    intermediate through HBM (2 reads + 1 write of an 8 kB row per
+    combine); fused streams each operand row once and keeps intermediates
+    in VMEM scratch, so its traffic is load-bound, not op-bound."""
+    import sys
+    sys.path.insert(0, "src")
+    from repro.kernels.roaring import fused
+
+    lines = ["| tree | N | launches per-op | launches fused | "
+             "HBM MB per-op | HBM MB fused | traffic ratio |",
+             "|" + "---|" * 7]
+    for N in (4, 16, 64):
+        plan = fused.plan_tape(("and",) + tuple(range(N)))
+        st = fused.plan_stats(plan, n_containers)
+        ratio = st["hbm_bytes_per_op"] / max(st["hbm_bytes_fused"], 1)
+        lines.append(
+            f"| and_n{N} | {N} | {st['launches_per_op']} | "
+            f"{st['launches_fused']} | "
+            f"{st['hbm_bytes_per_op'] / 1e6:.2f} | "
+            f"{st['hbm_bytes_fused'] / 1e6:.2f} | {ratio:.2f}x |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="artifacts/dryrun")
     ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--containers", type=int, default=64,
+                    help="container columns for the fused traffic model")
     args = ap.parse_args()
     recs = load(args.dir, args.mesh)
     print(f"## Roofline ({args.mesh}, {len(recs)} cells)\n")
-    print(table(recs))
-    w, c, p = pick_hillclimb(recs)
-    print(f"\nhillclimb candidates: worst-fraction={w}  "
-          f"most-collective={c}  paper-representative={p}")
+    if recs:
+        print(table(recs))
+        w, c, p = pick_hillclimb(recs)
+        print(f"\nhillclimb candidates: worst-fraction={w}  "
+              f"most-collective={c}  paper-representative={p}")
+    else:
+        print("(no dryrun artifacts)")
+    print(f"\n## Fused tree evaluator: modeled launches / HBM traffic "
+          f"(C={args.containers})\n")
+    print(fused_model(args.containers))
 
 
 if __name__ == "__main__":

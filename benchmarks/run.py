@@ -17,14 +17,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="reduced repeats")
     ap.add_argument("--sections", default="all",
                     help="comma list: fig2ab,fig2cd,fig2ef,tables,alg4,"
-                         "dispatch,compressruns,kernels,jax,robust")
+                         "dispatch,compressruns,kernels,fused,jax,robust")
     args = ap.parse_args()
 
     from . import paper_figures as pf
 
     sections = args.sections.split(",") if args.sections != "all" else [
         "fig2ab", "fig2cd", "fig2ef", "tables", "alg4", "dispatch",
-        "compressruns", "kernels", "jax", "robust"]
+        "compressruns", "kernels", "fused", "jax", "robust"]
     rows = []
 
     def run(name, fn):
@@ -50,6 +50,14 @@ def main() -> None:
             rows.extend(kernel_bench.run(quick=args.quick))
         except ImportError:
             print("# kernels section unavailable", file=sys.stderr)
+
+    if "fused" in sections:
+        try:
+            from . import kernel_bench
+            print("# --- fused ---", file=sys.stderr, flush=True)
+            rows.extend(kernel_bench.fused_ab(quick=args.quick))
+        except ImportError:
+            print("# fused section unavailable", file=sys.stderr)
 
     if "jax" in sections:
         try:

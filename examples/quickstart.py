@@ -104,6 +104,18 @@ def main():
           f"|(0 ∪ 1) \\ 2| = {n}; top-3 vs slab 0 = "
           f"{np.asarray(ids).tolist()} (scores {np.asarray(scores).tolist()})")
 
+    # --- fused execution (PR 7): the whole tree in ONE kernel launch -----------------
+    # per-op evaluation runs N-1 launches and round-trips every intermediate
+    # through HBM; fused=True compiles the tree to a tape and evaluates it in
+    # a single launch with intermediates in VMEM — byte-identical results
+    wide = index.or_(*[index.leaf(i) for i in range(8)])
+    filt = index.execute(stack, wide, fused=True)      # one launch, one finalize
+    assert filt.serialize() == index.execute(stack, wide).serialize()
+    nf = int(index.execute_card(stack, wide, fused=True))
+    assert nf == int(u.card())                         # same ∪ as wide_union
+    print(f"fused 8-way OR: |∪| = {nf} "
+          f"(one launch; byte-identical to the per-op executor)")
+
 
 if __name__ == "__main__":
     main()

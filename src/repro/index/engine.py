@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import jax_roaring as jr
+from repro.kernels.roaring import fused as _fused
 from repro.roaring.slab import RoaringSlab, SlabLike, _to_internal, _wrap
 
 __all__ = [
@@ -230,6 +231,68 @@ def _normalize(stack, expr):
 
 
 # =============================================================================
+# fused evaluation: the whole tree in ONE launch (kernels.roaring.fused)
+# =============================================================================
+
+def _fused_compile(stack, keys, expr: Expr):
+    """Lower an ``Expr`` to the fused evaluator's inputs: the structural
+    tree (distinct leaves replaced by dense operand indices), the stacked
+    operand rows u16[N, C, 4096], and the packed lift meta. Distinct leaves
+    are deduplicated — a leaf referenced twice streams from HBM once."""
+    order: list = []
+    index_of: dict = {}
+
+    def visit(e):
+        if isinstance(e, Leaf):
+            key = ("leaf", e.i)
+        elif isinstance(e, SlabLeaf):
+            key = ("slab", id(e.slab))
+        elif isinstance(e, And):
+            return ("and",) + tuple(visit(c) for c in e.children)
+        elif isinstance(e, Or):
+            return ("or",) + tuple(visit(c) for c in e.children)
+        elif isinstance(e, AndNot):
+            return ("andnot", visit(e.a), visit(e.b))
+        else:
+            raise TypeError(f"not an Expr: {e!r}")
+        if key not in index_of:
+            index_of[key] = len(order)
+            order.append(e)
+        return index_of[key]
+
+    tree = visit(expr)
+    states = []
+    for e in order:
+        if isinstance(e, Leaf):
+            d, c, k = _leaf_state(stack, e.i)
+            r = stack.nruns[e.i]
+        else:
+            d, c, k = jr._gather_raw(_to_internal(e.slab), keys)
+            r = jr._rows_nruns(d, k)
+        states.append((d, c, k, r))
+    data = jnp.stack([s[0] for s in states])
+    meta = _fused.pack_lift_meta(jnp.stack([s[2] for s in states]),
+                                 jnp.stack([s[1] for s in states]),
+                                 jnp.stack([s[3] for s in states]))
+    return _fused.plan_tape(tree), data, meta
+
+
+def _fused_eval(stack, keys, expr: Expr):
+    """Row-state result of the fused path: one ``ops.fused_tree`` launch,
+    root rows in bitmap domain (kind from the fused per-column card)."""
+    from repro.kernels.roaring import ops as _kops
+
+    plan, data, meta = _fused_compile(stack, keys, expr)
+    bits, card = _kops.fused_tree(data, meta, plan)
+    kind = jnp.where(card > 0, jr.KIND_BITMAP, jr.KIND_EMPTY).astype(
+        jnp.int32)
+    # empty rows carry the packed-array padding fill, matching the per-op
+    # pipeline's convention for dead payloads
+    bits = jnp.where((card > 0)[:, None], bits, jnp.uint16(0xFFFF))
+    return bits, card, kind
+
+
+# =============================================================================
 # graceful degradation: the Pallas -> XLA-ref fallback ladder
 # =============================================================================
 
@@ -273,16 +336,44 @@ def reset_degradation() -> None:
     _DEGRADATION.reset()
 
 
+def _run_ladder(rungs, max_retries: int, backoff_s: float):
+    """Run the first workable rung of ``rungs``: ordered ``(backend, fn)``
+    pairs, most-preferred first.
+
+    The first rung gets ``max_retries`` retries with exponential backoff
+    (transient device faults deserve a second chance before giving up on
+    the fast path); later rungs get one attempt each. Every failed attempt
+    counts in ``dispatch_failures``; every rung drop counts in
+    ``fallbacks``. A failure on the last rung propagates — there is nothing
+    left to degrade to.
+    """
+    from repro.kernels.roaring import ops as _kops
+
+    for r, (rung_backend, fn) in enumerate(rungs):
+        tries = (max_retries + 1) if r == 0 else 1
+        for attempt in range(tries):
+            try:
+                with _kops.backend_scope(rung_backend):
+                    return fn()
+            except _FALLBACK_ERRORS:
+                if r == len(rungs) - 1 and attempt == tries - 1:
+                    raise
+                _DEGRADATION.dispatch_failures += 1
+                if attempt < tries - 1:
+                    _DEGRADATION.retries += 1
+                    if backoff_s > 0:
+                        time.sleep(backoff_s * (2 ** attempt))
+        _DEGRADATION.fallbacks += 1
+
+
 def _run_degradable(fn, backend: Optional[str], max_retries: int,
                     backoff_s: float):
-    """Run ``fn`` with the Pallas->XLA-ref fallback ladder.
+    """Run ``fn`` with the per-op Pallas->XLA-ref fallback ladder.
 
     ``backend=None``/"auto" resolves to the hardware default. A preferred
     non-"xla" backend gets ``max_retries`` retries with exponential backoff;
     when they are exhausted the query degrades to the XLA reference backend
-    (bit-identical math, counted in ``degradation_stats().fallbacks``). A
-    failure on "xla" itself propagates — there is nothing left to degrade
-    to.
+    (bit-identical math, counted in ``degradation_stats().fallbacks``).
     """
     from repro.kernels.roaring import ops as _kops
 
@@ -290,25 +381,30 @@ def _run_degradable(fn, backend: Optional[str], max_retries: int,
     if preferred == "xla":
         with _kops.backend_scope("xla"):
             return fn()
-    last: Optional[BaseException] = None
-    for attempt in range(max_retries + 1):
-        try:
-            with _kops.backend_scope(preferred):
-                return fn()
-        except _FALLBACK_ERRORS as e:
-            _DEGRADATION.dispatch_failures += 1
-            last = e
-            if attempt < max_retries:
-                _DEGRADATION.retries += 1
-                if backoff_s > 0:
-                    time.sleep(backoff_s * (2 ** attempt))
-    _DEGRADATION.fallbacks += 1
-    with _kops.backend_scope("xla"):
-        return fn()
+    return _run_ladder([(preferred, fn), ("xla", fn)], max_retries,
+                       backoff_s)
+
+
+def _run_query(fused_fn, per_op_fn, fused: bool, backend: Optional[str],
+               max_retries: int, backoff_s: float):
+    """Ladder selection for one query: ``fused=False`` runs the classic
+    two-rung per-op ladder; ``fused=True`` prepends the fused evaluator —
+    preferred-backend-fused -> preferred-backend-per-op -> XLA-ref-per-op
+    (the per-op tree-reduce stays the bit-identity reference and the rung
+    of last resort)."""
+    from repro.kernels.roaring import ops as _kops
+
+    if not fused:
+        return _run_degradable(per_op_fn, backend, max_retries, backoff_s)
+    preferred = backend or _kops.current_backend()
+    rungs = [(preferred, fused_fn), (preferred, per_op_fn)]
+    if preferred != "xla":
+        rungs.append(("xla", per_op_fn))
+    return _run_ladder(rungs, max_retries, backoff_s)
 
 
 def execute(stack: Optional[RoaringSlab], expr: Optional[Expr] = None,
-            capacity: Optional[int] = None, *,
+            capacity: Optional[int] = None, *, fused: bool = False,
             backend: Optional[str] = None, max_retries: int = 1,
             backoff_s: float = 0.0) -> RoaringSlab:
     """Evaluate ``expr`` over the stacked slab -> canonical ``RoaringSlab``.
@@ -320,39 +416,57 @@ def execute(stack: Optional[RoaringSlab], expr: Optional[Expr] = None,
     key row is then the merged key set of the slab leaves (``capacity``
     bounds it, defaulting to the sum of leaf capacities).
 
+    ``fused=True`` evaluates the whole tree in ONE kernel launch
+    (``kernels.roaring.fused``): leaves stream from HBM once, every
+    intermediate stays in VMEM scratch, and the per-op tree-reduce becomes
+    the fallback rung — same bytes out either way.
+
     ``backend`` picks the dispatch backend ("pallas" / "xla" / None=auto).
     Dispatch failures on a non-"xla" backend (real device faults or a
     ``runtime.fault_tolerance.FaultPlan``) retry ``max_retries`` times with
-    exponential backoff, then degrade to the XLA reference backend — same
-    math, bit-identical result — incrementing ``degradation_stats()``.
+    exponential backoff, then degrade rung by rung — fused to per-op,
+    preferred backend to the XLA reference — incrementing
+    ``degradation_stats()`` while results stay bit-identical.
     """
     stack, expr = _normalize(stack, expr)
     keys = _shared_keys(stack, expr, capacity)
 
-    def attempt() -> RoaringSlab:
+    def per_op() -> RoaringSlab:
         data, card, kind = _eval(stack, keys, expr)
         return _wrap(jr._finalize_rows(keys, data, card, kind))
 
-    return _run_degradable(attempt, backend, max_retries, backoff_s)
+    def fused_attempt() -> RoaringSlab:
+        data, card, kind = _fused_eval(stack, keys, expr)
+        return _wrap(jr._finalize_rows(keys, data, card, kind))
+
+    return _run_query(fused_attempt, per_op, fused, backend, max_retries,
+                      backoff_s)
 
 
 def execute_card(stack: Optional[RoaringSlab],
                  expr: Optional[Expr] = None,
-                 capacity: Optional[int] = None, *,
+                 capacity: Optional[int] = None, *, fused: bool = False,
                  backend: Optional[str] = None, max_retries: int = 1,
                  backoff_s: float = 0.0) -> jax.Array:
     """|expr| without materializing a result slab — every combine level
     already maintains exact per-row cardinalities (fused popcounts on the
-    bitmap-domain paths), so the root's counter sum is the answer. Runs the
-    same degradation ladder as ``execute``."""
+    bitmap-domain paths), so the root's counter sum is the answer.
+    ``fused=True`` gets it from the mega-kernel's per-column root popcount
+    (one launch, no canonicalization at all). Runs the same degradation
+    ladder as ``execute``."""
     stack, expr = _normalize(stack, expr)
     keys = _shared_keys(stack, expr, capacity)
 
-    def attempt() -> jax.Array:
+    def per_op() -> jax.Array:
         _, card, _ = _eval(stack, keys, expr)
         return jnp.sum(card)
 
-    return _run_degradable(attempt, backend, max_retries, backoff_s)
+    def fused_attempt() -> jax.Array:
+        _, card, _ = _fused_eval(stack, keys, expr)
+        return jnp.sum(card)
+
+    return _run_query(fused_attempt, per_op, fused, backend, max_retries,
+                      backoff_s)
 
 
 def wide_union(stack: RoaringSlab) -> RoaringSlab:

@@ -68,6 +68,8 @@ __all__ = [
     "PairClass", "AND_TABLE", "class_predicate", "out_mask", "route_mask",
     "union_route", "andnot_route",
     "coverage_by_search", "coverage_by_scatter", "make_and_kernels",
+    "array_coverage_by_search", "array_coverage_by_scatter",
+    "make_lift_kernels",
     "bind_args", "META_FIELDS", "unpack_meta",
 ]
 
@@ -228,6 +230,69 @@ def coverage_by_scatter(run_row, n_runs):
     diff = diff.at[jnp.where(span, lw, ROW_WORDS + 1)].add(-1, mode="drop")
     full = jnp.where(jnp.cumsum(diff)[:ROW_WORDS] > 0, 0xFFFF, 0)
     return (partial | full).astype(jnp.uint16).reshape(ROW_SHAPE)
+
+
+def array_coverage_by_search(arr_row, card):
+    """Packed sorted array row -> membership bitmap tile, gather-only (the
+    Pallas-side lift for the fused tree evaluator): each of the 2^16 bit
+    positions lower_bounds the array's packed prefix — 16 lane-parallel
+    passes of 13 halvings over the (32,128) word tile. Bit-identical to
+    ``array_coverage_by_scatter``."""
+    word = _flat_pos()
+
+    def contains(p):
+        lo = jnp.zeros(ROW_SHAPE, jnp.int32)
+        hi = jnp.full(ROW_SHAPE, card, jnp.int32)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = (lo + hi) // 2
+            vals = _take_flat(arr_row, jnp.clip(mid, 0, ROW_WORDS - 1)).astype(
+                jnp.int32)
+            go_right = vals < p
+            return (jnp.where(go_right, mid + 1, lo),
+                    jnp.where(go_right, hi, mid))
+
+        lo, _ = jax.lax.fori_loop(0, 13, body, (lo, hi))
+        found = _take_flat(arr_row, jnp.clip(lo, 0, ROW_WORDS - 1)).astype(
+            jnp.int32) == p
+        return found & (lo < card)
+
+    def bit_body(j, cov):
+        return cov | (contains(word * 16 + j).astype(jnp.uint16) << j)
+
+    return jax.lax.fori_loop(0, 16, bit_body,
+                             jnp.zeros(ROW_SHAPE, jnp.uint16))
+
+
+def array_coverage_by_scatter(arr_row, card):
+    """Packed sorted array row -> membership bitmap tile via one-hot word
+    scatter, O(4096) (the XLA-side lift). Values are distinct, so each bit
+    is contributed exactly once; not Pallas-lowerable (scatter)."""
+    flat = arr_row.reshape(ROW_WORDS).astype(jnp.int32)
+    valid = jnp.arange(ROW_WORDS) < card
+    words = jnp.zeros((ROW_WORDS,), jnp.int32)
+    words = words.at[jnp.where(valid, flat >> 4, ROW_WORDS)].add(
+        1 << (flat & 15), mode="drop")
+    return words.astype(jnp.uint16).reshape(ROW_SHAPE)
+
+
+def make_lift_kernels(coverage: Callable,
+                      array_coverage: Callable) -> Dict[int, Callable]:
+    """Bind the kind -> bitmap-domain lift table to backend-specific run /
+    array coverage implementations.
+
+    Every lift: ``fn(row, card, n_runs) -> bits u16[32,128]`` — the row's
+    membership bitmap regardless of its stored kind. This is the leaf-load
+    step of the fused tree evaluator: once every operand is in bitmap
+    domain, the whole expression is word ops.
+    """
+    return {
+        KIND_EMPTY: lambda row, c, r: jnp.zeros(ROW_SHAPE, jnp.uint16),
+        KIND_ARRAY: lambda row, c, r: array_coverage(row, c),
+        KIND_BITMAP: lambda row, c, r: row.astype(jnp.uint16),
+        KIND_RUN: lambda row, c, r: coverage(row, r),
+    }
 
 
 def make_and_kernels(coverage: Callable) -> Dict[str, Callable]:

@@ -1,0 +1,313 @@
+"""Fused expression-tree evaluation: ONE kernel launch per whole Boolean tree.
+
+The per-op executor (``index.engine._eval``) pays a separate dispatch launch
+— and a full HBM round trip of intermediate row state — per combine step of
+an AND/OR/ANDNOT tree. This module collapses the whole tree into a single
+Pallas launch whose grid body evaluates every node for one container column:
+
+  * **plan** (``plan_tape``): the static expression shape is topo-ordered
+    into a *tape* — a left-fold post-order sequence of ``("load", operand,
+    slot)`` leaf lifts and ``(op, a_slot, b_slot, dst_slot)`` word ops — with
+    stack-machine scratch-slot assignment (an n-ary node folds in place, so
+    slot pressure is the tree's operand depth, not its width). Plans are
+    hash-consed per structural tree (``functools.lru_cache``), so the jitted
+    evaluator retraces once per expression *shape*, never per query.
+  * **load**: each distinct leaf row is streamed from HBM exactly once and
+    lifted to its membership bitmap in VMEM scratch via the kind-dispatched
+    lift table (``dispatch.make_lift_kernels``) — arrays and runs
+    binary-search gather-only on the Pallas side, scatter on the XLA side;
+    both bit-identical.
+  * **ops**: every interior node is a pure 8 kB word op between scratch
+    slots — intermediates never leave VMEM.
+  * **root**: the root slot's popcount is fused into the same pass; the
+    single best-of-three canonicalization happens once, outside, in
+    ``jax_roaring._finalize_rows`` (same final pass as the per-op path, so
+    results stay byte-identical to ``py_roaring``).
+
+Columns where *every* leaf is empty skip their payload DMA entirely: the
+meta block carries a per-column live flag and the operand index_map redirects
+dead columns to block 0 (already resident — the same zero-cost-skip
+mechanism ``kernel.py`` uses for empty pairs).
+
+``fused_eval_ref`` is the XLA mirror (same tape, batched cond-guarded lifts,
+same word ops) — the third backend of the bit-identity contract and the
+fallback rung the ``index`` degradation ladder lands on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import dispatch as D
+
+ROW_WORDS = D.ROW_WORDS
+ROW_SHAPE = D.ROW_SHAPE
+
+__all__ = [
+    "FusedPlan", "plan_tape", "plan_cache_size", "plan_stats",
+    "fused_eval_pallas", "fused_eval_ref",
+    "LIFT_META_FIELDS", "pack_lift_meta",
+]
+
+# A tree is an operand index (leaf) or an (op, *subtrees) tuple.
+Tree = Union[int, Tuple]
+
+_WORD_OPS = {
+    "and": jnp.bitwise_and,
+    "or": jnp.bitwise_or,
+    "andnot": lambda a, b: jnp.bitwise_and(a, ~b),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPlan:
+    """A compiled expression shape: the static op tape one fused launch
+    replays per container column.
+
+    ``tape`` steps are ``("load", operand_idx, dst_slot)`` — lift operand
+    row into scratch — or ``(op, a_slot, b_slot, dst_slot)`` with ``op`` in
+    ``{"and", "or", "andnot"}``. The result lands in slot 0. ``n_slots`` is
+    the peak scratch height; ``n_operands`` the number of distinct leaf
+    rows the kernel streams in.
+    """
+
+    tape: Tuple[Tuple, ...]
+    n_slots: int
+    n_operands: int
+
+    @property
+    def n_loads(self) -> int:
+        return sum(1 for s in self.tape if s[0] == "load")
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.tape) - self.n_loads
+
+
+def _emit(node: Tree, tape: list, height: int) -> int:
+    """Post-order tape emission with stack-machine slot allocation: a node
+    evaluates into slot ``height``; an n-ary node left-folds in place so
+    only one extra slot is live per nesting level. Returns the peak slot
+    count."""
+    if isinstance(node, int):
+        tape.append(("load", node, height))
+        return height + 1
+    op = node[0]
+    if op not in _WORD_OPS:
+        raise ValueError(f"unknown fused op {op!r}")
+    children = node[1:]
+    if op == "andnot" and len(children) != 2:
+        raise ValueError("andnot is binary")
+    if not children:
+        raise ValueError(f"{op} node needs children")
+    peak = _emit(children[0], tape, height)
+    for ch in children[1:]:
+        peak = max(peak, _emit(ch, tape, height + 1))
+        tape.append((op, height, height + 1, height))
+    return peak
+
+
+@functools.lru_cache(maxsize=None)
+def plan_tape(tree: Tree) -> FusedPlan:
+    """Compile a structural expression tree (operand indices at the leaves,
+    ``(op, *subtrees)`` tuples inside) into a ``FusedPlan``. Hash-consed:
+    equal trees return the *same* plan object, so plans are free to use as
+    jit static arguments without retraces."""
+    tape: list = []
+    n_slots = _emit(tree, tape, 0)
+    operands = {s[1] for s in tape if s[0] == "load"}
+    n_operands = (max(operands) + 1) if operands else 0
+    return FusedPlan(tuple(tape), n_slots, n_operands)
+
+
+def plan_cache_size() -> int:
+    """Number of distinct expression shapes compiled so far (retrace-guard
+    instrumentation)."""
+    return plan_tape.cache_info().currsize
+
+
+def plan_stats(plan: FusedPlan, n_containers: int) -> dict:
+    """Launch-count / HBM-traffic model for one plan over ``n_containers``
+    key-aligned columns — fused vs the per-op tree-reduce path.
+
+    The fused launch reads each distinct operand row once and writes the
+    root bits + card; the per-op path launches one dispatch per interior
+    combine, each reading two row states from HBM and writing one back.
+    (8 kB payload per container row; the i32 card adds 4 B.)
+    """
+    row = 2 * ROW_WORDS                       # u16[4096] payload bytes
+    per_col_fused = plan.n_loads * row + row + 4
+    per_col_per_op = plan.n_ops * (2 * row + row + 4) + plan.n_loads * 0
+    return {
+        "n_operands": plan.n_operands,
+        "n_combines": plan.n_ops,
+        "launches_fused": 1,
+        "launches_per_op": max(plan.n_ops, 1),
+        "hbm_bytes_fused": per_col_fused * n_containers,
+        "hbm_bytes_per_op": per_col_per_op * n_containers,
+    }
+
+
+# =============================================================================
+# meta packing (shared by both backends and the engine)
+# =============================================================================
+
+LIFT_META_FIELDS = 3  # (kind, card, n_runs) per (operand, column)
+
+
+def pack_lift_meta(kind, card, nruns):
+    """Pack per-operand row tags + the per-column live flags into the fused
+    kernel's scalar-prefetch block.
+
+    kind/card/nruns: i32[N, C]. Layout: interleaved (kind, card, n_runs) at
+    flat index ``3 * (n * C + i)``, followed by C live flags (column ``i``
+    is live iff any operand's row there is non-empty) that the operand
+    index_map reads to skip dead columns' DMA.
+    """
+    fields = jnp.stack([kind, card, nruns], axis=2).reshape(-1)
+    live = jnp.any(kind != D.KIND_EMPTY, axis=0)
+    return jnp.concatenate([fields, live.astype(jnp.int32)]).astype(jnp.int32)
+
+
+# =============================================================================
+# Pallas fused evaluator
+# =============================================================================
+
+_PL_LIFTS = D.make_lift_kernels(D.coverage_by_search,
+                                D.array_coverage_by_search)
+_REF_LIFTS = D.make_lift_kernels(D.coverage_by_scatter,
+                                 D.array_coverage_by_scatter)
+
+
+def _fused_kernel(meta_ref, ops_ref, out_ref, card_ref, scratch_ref, *,
+                  plan: FusedPlan, N: int, C: int):
+    """One container column per grid step: replay the whole tape in VMEM.
+
+    ``ops_ref`` is the (N, 1, 32, 128) column block — every operand's row
+    for this column, streamed in once. ``scratch_ref`` holds the slot stack;
+    no intermediate ever returns to HBM. Dead columns (live flag 0) write
+    zeros without touching operand data — their blocks were redirected to
+    column 0 by the index_map, so the DMA is a no-op re-fetch of a resident
+    block.
+    """
+    i = pl.program_id(0)
+    live = meta_ref[LIFT_META_FIELDS * N * C + i] != 0
+
+    @pl.when(live)
+    def _run():
+        for step in plan.tape:
+            if step[0] == "load":
+                _, n, dst = step
+                base = LIFT_META_FIELDS * (n * C) + LIFT_META_FIELDS * i
+                kind = meta_ref[base]
+                card = meta_ref[base + 1]
+                nruns = meta_ref[base + 2]
+                for k, lift in _PL_LIFTS.items():
+
+                    @pl.when(kind == k)
+                    def _load(lift=lift, dst=dst, n=n, card=card,
+                              nruns=nruns):
+                        scratch_ref[dst] = lift(ops_ref[n, 0], card, nruns)
+            else:
+                op, sa, sb, dst = step
+                scratch_ref[dst] = _WORD_OPS[op](scratch_ref[sa],
+                                                 scratch_ref[sb])
+        res = scratch_ref[0]
+        out_ref[0] = res
+        card_ref[0] = jnp.sum(jax.lax.population_count(res).astype(jnp.int32))
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        out_ref[0] = jnp.zeros(ROW_SHAPE, jnp.uint16)
+        card_ref[0] = 0
+
+
+def fused_eval_pallas(ops_data: jax.Array, meta: jax.Array, *,
+                      plan: FusedPlan, interpret: bool = True):
+    """Evaluate a whole Boolean tree in ONE Pallas launch.
+
+    ops_data: u16[N, C, 4096] raw container rows (N distinct operands, key
+    aligned). meta: the ``pack_lift_meta`` block (i32[3*N*C + C]). plan: the
+    compiled tape (static). Returns (bits u16[C, 4096] bitmap-domain root
+    rows, card i32[C]).
+    """
+    N, C = ops_data.shape[0], ops_data.shape[1]
+    nc = LIFT_META_FIELDS * N * C
+
+    def ops_map(i, m):
+        # dead columns re-fetch block 0 (resident): zero-cost DMA skip
+        return (0, jnp.where(m[nc + i] != 0, i, 0), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[pl.BlockSpec((N, 1, *ROW_SHAPE), ops_map)],
+        out_specs=[
+            pl.BlockSpec((1, *ROW_SHAPE), lambda i, m: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i, m: (i,), memory_space=pltpu.SMEM),
+        ],
+        scratch_shapes=[pltpu.VMEM((plan.n_slots, *ROW_SHAPE), jnp.uint16)],
+    )
+    bits, card = pl.pallas_call(
+        functools.partial(_fused_kernel, plan=plan, N=N, C=C),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, *ROW_SHAPE), jnp.uint16),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(meta, ops_data.reshape(N, C, *ROW_SHAPE))
+    return bits.reshape(C, ROW_WORDS), card
+
+
+# =============================================================================
+# XLA mirror (same tape, batched lifts)
+# =============================================================================
+
+def fused_eval_ref(ops_data: jax.Array, meta: jax.Array, *,
+                   plan: FusedPlan):
+    """XLA mirror of ``fused_eval_pallas``: identical tape, one batched
+    cond-guarded lift pass per load (scatter-based coverage), the same word
+    ops over whole [C, 32, 128] slot arrays. Bit-identical output."""
+    N, C = ops_data.shape[0], ops_data.shape[1]
+    fields = meta[:LIFT_META_FIELDS * N * C].reshape(N, C, LIFT_META_FIELDS)
+    kind, card, nruns = fields[..., 0], fields[..., 1], fields[..., 2]
+    live = meta[LIFT_META_FIELDS * N * C:] != 0
+    rows = ops_data.reshape(N, C, *ROW_SHAPE)
+
+    def load(n):
+        bits = jnp.zeros((C, *ROW_SHAPE), jnp.uint16)
+        # bitmap rows pass through; array / run rows lift via scatter only
+        # when the class is present (cond-skipped wholesale otherwise)
+        bits = jnp.where((kind[n] == D.KIND_BITMAP)[:, None, None],
+                         rows[n], bits)
+        for k in (D.KIND_ARRAY, D.KIND_RUN):
+            pred = kind[n] == k
+            lift = _REF_LIFTS[k]
+
+            def run(b, n=n, pred=pred, lift=lift):
+                lifted = jax.vmap(lift)(rows[n], card[n], nruns[n])
+                return jnp.where(pred[:, None, None], lifted, b)
+
+            bits = jax.lax.cond(jnp.any(pred), run, lambda b: b, bits)
+        return bits
+
+    slots = {}
+    for step in plan.tape:
+        if step[0] == "load":
+            _, n, dst = step
+            slots[dst] = load(n)
+        else:
+            op, sa, sb, dst = step
+            slots[dst] = _WORD_OPS[op](slots[sa], slots[sb])
+    res = slots[0] * live[:, None, None].astype(jnp.uint16)
+    card_out = jnp.sum(jax.lax.population_count(res).astype(jnp.int32),
+                       axis=(1, 2))
+    return res.reshape(C, ROW_WORDS), card_out

@@ -8,8 +8,11 @@ Three kernels:
    same VMEM pass as the bitwise op — the TPU analogue of the paper's
    "popcount rides the superscalar pipeline alongside the OR" observation
    (S4, factors 1-3). Container-type tags arrive via scalar prefetch; fully
-   empty pairs skip the VPU work with ``@pl.when`` (the DMA still runs — on
-   TPU the bandwidth term is the floor, see DESIGN.md).
+   empty pairs skip the VPU work with ``@pl.when`` *and* their payload DMA:
+   the operand index_maps (``skip_dead_rows``) read the prefetched tags and
+   redirect dead columns to block 0, which stays resident — so an empty
+   column costs neither compute nor bandwidth (previously the copy still
+   ran; see DESIGN.md).
 
 2. ``array_intersect``: the galloping adaptation. Each lane binary-searches
    the other container's packed sorted array in 13 steps (lower_bound over a
@@ -61,6 +64,36 @@ _OPS = {
 }
 
 
+def skip_dead_rows(live):
+    """Operand index_map factory for the zero-cost empty-column DMA skip.
+
+    ``live(scalars, i)`` decides from the scalar-prefetch block whether grid
+    column ``i`` has work; dead columns get their operand block redirected
+    to column 0, which is already resident after the first fetch — so the
+    per-column payload copy the ``@pl.when`` skip used to leave running
+    becomes a no-op re-fetch. Safe because every kernel body writes its
+    dead-column outputs without reading operand data (scalar-prefetch index
+    maps may read the scalar block; see ``PrefetchScalarGridSpec``).
+    """
+    def index_map(i, scalars):
+        return (jnp.where(live(scalars, i), i, 0), 0, 0)
+
+    return index_map
+
+
+def _pair_live(kinds, i):
+    """Either side non-empty (interleaved i32[2C] kind tags)."""
+    return jnp.logical_or(kinds[2 * i] != KIND_EMPTY,
+                          kinds[2 * i + 1] != KIND_EMPTY)
+
+
+def _pair_both_live(meta, i):
+    """Both sides non-empty (i32[6C] dispatch meta) — an AND with an empty
+    side is empty, so either-empty columns take the dead branch."""
+    return jnp.logical_and(meta[D.META_FIELDS * i] != KIND_EMPTY,
+                           meta[D.META_FIELDS * i + 1] != KIND_EMPTY)
+
+
 def _container_op_kernel(kinds_ref, a_ref, b_ref, out_ref, card_ref, *, op: str):
     """One container-row pair per grid step; fused op + popcount."""
     i = pl.program_id(0)
@@ -98,8 +131,8 @@ def container_op_pallas(a_bits: jax.Array, b_bits: jax.Array,
         num_scalar_prefetch=1,
         grid=(C,),
         in_specs=[
-            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
-            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1, *ROW_SHAPE), skip_dead_rows(_pair_live)),
+            pl.BlockSpec((1, *ROW_SHAPE), skip_dead_rows(_pair_live)),
         ],
         out_specs=[
             pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
@@ -233,8 +266,8 @@ def intersect_dispatch_pallas(a_data: jax.Array, b_data: jax.Array,
         num_scalar_prefetch=1,
         grid=(C,),
         in_specs=[
-            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
-            pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((1, *ROW_SHAPE), skip_dead_rows(_pair_both_live)),
+            pl.BlockSpec((1, *ROW_SHAPE), skip_dead_rows(_pair_both_live)),
         ],
         out_specs=[
             pl.BlockSpec((1, *ROW_SHAPE), lambda i, k: (i, 0, 0)),

@@ -34,6 +34,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from . import fused as _f
 from . import kernel as _k
 from . import ref as _ref
 
@@ -160,6 +161,31 @@ def _intersect_dispatch_stacked(a_data, b_data, meta, use_pallas, interpret):
         a_data.reshape(N * C, a_data.shape[2]),
         b_data.reshape(N * C, b_data.shape[2]), meta.reshape(-1))
     return hits.reshape(N, C, a_data.shape[2]), card.reshape(N, C)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "use_pallas",
+                                             "interpret"))
+def _fused_tree(ops_data, meta, plan, use_pallas, interpret):
+    if use_pallas or interpret:
+        return _f.fused_eval_pallas(ops_data, meta, plan=plan,
+                                    interpret=not _on_tpu())
+    return _f.fused_eval_ref(ops_data, meta, plan=plan)
+
+
+def fused_tree(ops_data, meta, plan,
+               use_pallas: bool | None = None, interpret: bool = False):
+    """Evaluate a whole compiled Boolean expression tree in ONE launch.
+
+    ops_data: u16[N, C, 4096] raw container rows (one per distinct leaf, key
+    aligned); meta: the ``fused.pack_lift_meta`` scalar-prefetch block
+    (i32[3*N*C + C]); plan: a ``fused.FusedPlan`` (static — hash-consed per
+    expression shape, so same-shape queries never retrace). Returns
+    (bits u16[C, 4096] bitmap-domain root rows, card i32[C]); the caller
+    runs the single best-of-three canonicalization. Pallas mega-kernel on
+    TPU, tape-mirroring XLA evaluator elsewhere.
+    """
+    use_pallas, interpret = _resolve(use_pallas, interpret)
+    return _fused_tree(ops_data, meta, plan, use_pallas, interpret)
 
 
 def intersect_dispatch_stacked(a_data, b_data, meta,
