@@ -17,14 +17,15 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="reduced repeats")
     ap.add_argument("--sections", default="all",
                     help="comma list: fig2ab,fig2cd,fig2ef,tables,alg4,"
-                         "dispatch,compressruns,kernels,fused,jax,robust")
+                         "dispatch,compressruns,kernels,fused,jax,robust,"
+                         "store")
     args = ap.parse_args()
 
     from . import paper_figures as pf
 
     sections = args.sections.split(",") if args.sections != "all" else [
         "fig2ab", "fig2cd", "fig2ef", "tables", "alg4", "dispatch",
-        "compressruns", "kernels", "fused", "jax", "robust"]
+        "compressruns", "kernels", "fused", "jax", "robust", "store"]
     rows = []
 
     def run(name, fn):
@@ -74,6 +75,14 @@ def main() -> None:
             rows.extend(robust_bench.run(quick=args.quick))
         except ImportError:
             print("# robust section unavailable", file=sys.stderr)
+
+    if "store" in sections:
+        try:
+            from . import store_bench
+            print("# --- store ---", file=sys.stderr, flush=True)
+            rows.extend(store_bench.run(quick=args.quick))
+        except ImportError:
+            print("# store section unavailable", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, t, d in rows:

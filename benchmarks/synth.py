@@ -61,6 +61,42 @@ def gen_run_set(density: float, avg_run: float, seed: int,
     return np.unique(np.concatenate([np.arange(s, e) for s, e in ranges]))
 
 
+def gen_census_like(n_rows: int, seed: int, *, n_cat: int = 4,
+                    n_int: int = 2, sort_rows: bool = False) -> dict:
+    """Census-like columnar records: correlated low-cardinality categorical
+    columns plus non-negative integer columns — the store/benchmark workload
+    shared by ``tests/test_store.py`` and ``benchmarks/store_bench.py``
+    (replacing ad-hoc per-file data setup).
+
+    A latent "region" drives every column (census attributes correlate:
+    geography predicts income predicts occupation), so AND queries have
+    non-trivial selectivity and posting bitmaps cluster. Cardinalities
+    follow the census pattern (a few values dominate each column).
+    ``sort_rows=True`` lexicographically sorts the rows (the
+    arXiv:0901.3751 reordering axis): sorted rows form long runs, which is
+    where RLE formats close the gap — the honest-fight variant.
+    """
+    rng = np.random.default_rng(seed)
+    latent = rng.integers(0, 8, n_rows)
+    records: dict = {}
+    for i in range(n_cat):
+        card = (2, 8, 16, 32, 64, 128)[i % 6]
+        noise = rng.integers(0, max(2, card // 4), n_rows)
+        records[f"cat{i}"] = ((latent * (card // 8 + 1) + noise) % card
+                              ).astype(np.int64)
+    for i in range(n_int):
+        if i % 2 == 0:       # age-like: clipped normal, correlated
+            vals = rng.normal(30 + 5 * latent, 12, n_rows)
+            records[f"int{i}"] = np.clip(vals, 0, 95).astype(np.int64)
+        else:                # income-like: lognormal, long tail
+            vals = rng.lognormal(9 + 0.15 * latent, 0.7, n_rows)
+            records[f"int{i}"] = np.minimum(vals, 500_000).astype(np.int64)
+    if sort_rows and n_rows:
+        order = np.lexsort(tuple(reversed(list(records.values()))))
+        records = {k: v[order] for k, v in records.items()}
+    return records
+
+
 # ---------------------------------------------------------------------------
 # Real-data surrogates for Tables I-II.
 #

@@ -1,6 +1,7 @@
 """Quickstart: the Roaring bitmap core, the paper's claims in 60 seconds —
 plus the ``repro.roaring`` object API (pytree-native slabs with operator
-algebra, portable serialization) and the wide-query engine.
+algebra, portable serialization), the wide-query engine, and the columnar
+``repro.store`` bitmap index with its predicate compiler.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -115,6 +116,31 @@ def main():
     assert nf == int(u.card())                         # same ∪ as wide_union
     print(f"fused 8-way OR: |∪| = {nf} "
           f"(one launch; byte-identical to the per-op executor)")
+
+    # --- the store (PR 8): columnar records -> bitmap index -> predicates ------------
+    from repro import store
+
+    n_rows = 5_000
+    records = {
+        "city": rng.integers(0, 8, n_rows).astype(np.int64),
+        "kind": np.asarray(["a", "b", "c"])[rng.integers(0, 3, n_rows)],
+        "age": np.clip(rng.normal(35, 12, n_rows), 0, 95).astype(np.int64),
+    }
+    s = store.BitmapStore.build(records, bsi=("age",))   # age: bit-sliced
+    pred = store.and_(store.eq("kind", "b"),
+                      store.not_(store.in_("city", [2, 5])),
+                      store.range_("age", 30, 40))
+    rows = s.query_indices(pred, fused=True)             # one kernel launch
+    mask = ((records["kind"] == "b") & ~np.isin(records["city"], [2, 5])
+            & (records["age"] >= 30) & (records["age"] <= 40))
+    assert np.array_equal(rows, np.nonzero(mask)[0])     # == numpy row filter
+    assert s.count(pred) == rows.size
+    total = s.sum_("age", store.eq("kind", "b"))         # bit-sliced aggregate
+    assert total == int(records["age"][records["kind"] == "b"].sum())
+    blob = s.save()                                      # portable slab blobs
+    assert store.BitmapStore.load(blob).save() == blob   # byte-exact reload
+    print(f"store: {s!r}\n  |{pred.__class__.__name__}| = {rows.size} rows, "
+          f"sum(age | kind=b) = {total}, saved {len(blob)} bytes")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,14 @@
 """Format-level tests for the WAH / Concise / BitSet baselines."""
 
+import sys
+from pathlib import Path
+
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+from synth import gen_census_like
 
 from repro.baselines import BitSet, ConciseBitmap, WahBitmap
 from repro.baselines._groups import (groups_to_indices, indices_to_groups)
@@ -106,6 +112,41 @@ def test_prop_baseline_ops(sa, sb):
         ba, bb = cls.from_array(sa), cls.from_array(sb)
         assert set(ba.and_(bb).to_array().tolist()) == (sa & sb)
         assert set(ba.or_(bb).to_array().tolist()) == (sa | sb)
+
+
+def test_baselines_match_roaring_on_census_queries():
+    """WAH / Concise / Roaring answer the same census-like predicate
+    queries bit-identically — the baselines the store benchmarks race
+    against are fair opponents, not strawmen."""
+    from repro.core import RoaringBitmap
+
+    records = gen_census_like(4000, 7)
+
+    def postings(name):
+        arr = np.asarray(records[name])
+        return {int(v): np.nonzero(arr == v)[0] for v in np.unique(arr)}
+
+    cat0, cat1, int0 = postings("cat0"), postings("cat1"), postings("int0")
+    mid = sorted(int0)[len(int0) // 2]
+    pairs = [
+        ("and", cat0[0], cat1[sorted(cat1)[1]]),
+        ("or", cat0[1], cat1[sorted(cat1)[0]]),
+        ("and", int0[mid], cat0[0]),
+        # range-style: (int0 in [mid, mid+5]) as an OR chain, AND a posting
+        ("and", np.unique(np.concatenate(
+            [int0[v] for v in sorted(int0) if mid <= v <= mid + 5])),
+         cat0[1]),
+    ]
+    for op, a, b in pairs:
+        want = np.intersect1d(a, b) if op == "and" else np.union1d(a, b)
+        for cls in (WahBitmap, ConciseBitmap):
+            ba, bb = cls.from_sorted_unique(a), cls.from_sorted_unique(b)
+            got = (ba.and_(bb) if op == "and" else ba.or_(bb)).to_array()
+            np.testing.assert_array_equal(got, want, err_msg=cls.__name__)
+        ra = RoaringBitmap.from_sorted_unique(a)
+        rb = RoaringBitmap.from_sorted_unique(b)
+        got = (ra & rb if op == "and" else ra | rb).to_array()
+        np.testing.assert_array_equal(got, want, err_msg="RoaringBitmap")
 
 
 def test_bitset_doubling_overhead_visible():

@@ -31,10 +31,11 @@ def test_api_doc_covers_all_exports():
     import repro.kernels.roaring.fused as F
     import repro.roaring as roaring
     import repro.roaring.validate as V
+    import repro.store as S
 
     text = (ROOT / "docs" / "API.md").read_text()
     documented = _api_symbols(text)
-    for mod in (roaring, core, jr, D, F, ix, V):
+    for mod in (roaring, core, jr, D, F, ix, V, S):
         missing = [s for s in mod.__all__ if s not in documented]
         assert not missing, (mod.__name__, missing)
 
@@ -50,7 +51,7 @@ def test_api_doc_symbols_exist():
         "repro.core": None, "repro.core.jax_roaring": None,
         "repro.kernels.roaring.dispatch": None, "repro.index": None,
         "repro.kernels.roaring.ops": None,
-        "repro.kernels.roaring.fused": None,
+        "repro.kernels.roaring.fused": None, "repro.store": None,
     }
     current = None
     for line in text.splitlines():

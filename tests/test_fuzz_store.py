@@ -1,0 +1,170 @@
+"""Differential byte-mutation fuzzing of the store container format.
+
+The PR-6 fuzz property, lifted to whole ``BitmapStore`` streams: for EVERY
+input byte string, ``BitmapStore.load``
+
+  * either returns a store or raises a typed ``RoaringFormatError``
+    subclass (``StoreFormatError`` for container-level violations, the
+    codec's own classes for slab-blob violations) — never a bare
+    struct/json/numpy error, never unbounded allocation;
+  * when it returns, ``save()`` is **byte-identical** to the input (the
+    stream was genuinely canonical) and the slot bookkeeping is coherent.
+
+Mutators: truncation, random bitflips, splices between store streams,
+header lies (magic / metadata length / leading JSON bytes), metadata digit
+lies (canonical-JSON-preserving value changes: shrunken ``n_rows``,
+reordered eq values, inflated bit widths — the lies a wire attacker can
+tell without breaking JSON), trailing garbage, and random blobs. Seeded
+``np.random.Generator`` loop, ``REPRO_FUZZ_EXAMPLES``-scalable, like
+``test_fuzz_format.py``.
+"""
+
+import os
+import struct
+from pathlib import Path
+
+import numpy as np
+
+from repro import store
+from repro.roaring import DecodeLimits, RoaringFormatError
+
+CORPUS = Path(__file__).parent / "corpus"
+
+N_EXAMPLES = max(300, int(os.environ.get("REPRO_FUZZ_EXAMPLES", "300")))
+LIMITS = DecodeLimits(max_containers=1 << 12, max_stream_bytes=1 << 22)
+
+
+def _seed_streams():
+    """Valid store streams covering eq/str/bsi columns, all container
+    kinds, and the empty store."""
+    rng = np.random.default_rng(0x57_0E)
+    stores = [
+        store.BitmapStore.build(
+            {"a": rng.integers(0, 5, 400).astype(np.int64)}),
+        store.BitmapStore.build({
+            "r": np.repeat(np.arange(3, dtype=np.int64), 120),
+            "s": np.asarray(["x", "y"])[rng.integers(0, 2, 360)],
+        }),
+        store.BitmapStore.build(
+            {"v": rng.integers(0, 50, 300).astype(np.int64)}, bsi=("v",)),
+        store.BitmapStore.build({"e": np.empty(0, np.int64)}),
+    ]
+    return [s.save() for s in stores]
+
+
+def _mutate(data: bytes, rng: np.random.Generator, pool) -> bytes:
+    buf = bytearray(data)
+    kind = rng.integers(0, 7)
+    if kind == 0 and len(buf) > 0:                     # truncate
+        buf = buf[: rng.integers(0, len(buf))]
+    elif kind == 1 and len(buf) > 0:                   # bitflips
+        for _ in range(int(rng.integers(1, 8))):
+            i = int(rng.integers(0, len(buf)))
+            buf[i] ^= 1 << int(rng.integers(0, 8))
+    elif kind == 2:                                    # splice two streams
+        other = pool[int(rng.integers(0, len(pool)))]
+        if len(buf) and len(other):
+            buf = buf[: int(rng.integers(0, len(buf)))] + \
+                bytearray(other[int(rng.integers(0, len(other))):])
+    elif kind == 3 and len(buf) >= 13:                 # header lie
+        i = int(rng.integers(0, 13))                   # magic + meta_len + {
+        buf[i] = int(rng.integers(0, 256))
+    elif kind == 4 and len(buf) >= 16:                 # metadata digit lie
+        (meta_len,) = struct.unpack_from("<I", bytes(buf), 8)
+        end = min(12 + meta_len, len(buf))
+        digits = [i for i in range(12, end)
+                  if 0x30 <= buf[i] <= 0x39]
+        if digits:
+            i = digits[int(rng.integers(0, len(digits)))]
+            buf[i] = 0x30 + int(rng.integers(0, 10))
+    elif kind == 5:                                    # trailing garbage
+        buf += bytes(rng.integers(0, 256, int(rng.integers(1, 9)),
+                                  dtype=np.uint8))
+    else:                                              # random blob
+        buf = bytearray(bytes(rng.integers(
+            0, 256, int(rng.integers(0, 80)), dtype=np.uint8)))
+    return bytes(buf)
+
+
+def _check_one(data: bytes) -> str:
+    """The store fuzz property for a single input."""
+    try:
+        s = store.BitmapStore.load(data, limits=LIMITS)
+    except RoaringFormatError:
+        return "rejected"                   # typed rejection: always fine
+    # accepted: canonical (byte-identical re-save) and internally coherent
+    assert s.save() == data, "accepted store did not re-save identically"
+    assert s.n_slabs == 2 + sum(c.n_slabs for c in s.columns)
+    assert len(s.slot_bitmap(store.UNIVERSE_SLOT)) == s.n_rows
+    assert len(s.slot_bitmap(store.EMPTY_SLOT)) == 0
+    for c in s.columns:
+        for i in range(c.n_slabs):
+            rb = s.slot_bitmap(c.base_slot + i)
+            arr = rb.to_array()
+            assert arr.size == 0 or int(arr[-1]) < s.n_rows
+    return "accepted"
+
+
+def test_fuzz_mutated_store_streams_never_crash():
+    seeds = _seed_streams()
+    rng = np.random.default_rng(0xF_57_02)
+    outcomes = {"accepted": 0, "rejected": 0}
+    for i in range(N_EXAMPLES):
+        data = _mutate(seeds[i % len(seeds)], rng, seeds)
+        if rng.integers(0, 4) == 0:         # stack a second mutation
+            data = _mutate(data, rng, seeds)
+        outcomes[_check_one(data)] += 1
+    assert outcomes["rejected"] >= 50, outcomes
+    # digit lies can land on a digit's current value, leaving the stream
+    # intact — accepts happen; the seeds test pins the accept path anyway
+    assert outcomes["accepted"] >= 0
+
+
+def test_fuzz_pure_garbage_store():
+    rng = np.random.default_rng(0xBAD_57)
+    for _ in range(150):
+        blob = bytes(rng.integers(0, 256, int(rng.integers(0, 128)),
+                                  dtype=np.uint8))
+        assert _check_one(blob) in ("accepted", "rejected")
+
+
+def test_fuzz_valid_store_streams_accepted():
+    for data in _seed_streams():
+        assert _check_one(data) == "accepted"
+
+
+def test_golden_store_corpus_replayed_through_fuzz_property():
+    """Every committed golden store satisfies the fuzz property (and they
+    are all accepts — the durable bytes stay canonical)."""
+    files = sorted(CORPUS.glob("golden_store_*.bin"))
+    assert files, "golden store corpus missing"
+    for f in files:
+        assert _check_one(f.read_bytes()) == "accepted", f.name
+
+
+def test_allocation_bomb_metadata_rejected():
+    """Canonical metadata declaring a near-2^32 row universe (or millions
+    of posting values) must be rejected before any stack materializes."""
+    meta = (b'{"columns":[{"bits":64,"kind":"bsi","name":"v"}],'
+            b'"n_rows":4294967296,"version":1}')
+    data = store.STORE_MAGIC + struct.pack("<I", len(meta)) + meta
+    try:
+        store.BitmapStore.load(data, limits=LIMITS)
+        raise AssertionError("allocation-bomb metadata was accepted")
+    except store.StoreFormatError as e:
+        assert "cell" in str(e)
+
+
+def test_non_canonical_metadata_rejected():
+    """Same JSON value, different bytes (a space) -> typed rejection; the
+    accept set is exactly the canonical encoders' output."""
+    good = store.BitmapStore.build({"a": np.zeros(4, np.int64)}).save()
+    (meta_len,) = struct.unpack_from("<I", good, 8)
+    meta = good[12:12 + meta_len].replace(b'"version":1', b'"version": 1')
+    bad = good[:8] + struct.pack("<I", len(meta)) + meta \
+        + good[12 + meta_len:]
+    try:
+        store.BitmapStore.load(bad, limits=LIMITS)
+        raise AssertionError("non-canonical metadata was accepted")
+    except store.StoreFormatError:
+        pass

@@ -1,0 +1,406 @@
+"""Differential query-oracle suite for the columnar ``BitmapStore``.
+
+Property under test, for every (records, predicate) pair: compiling the
+predicate and executing it through the engine — per-op AND ``fused=True`` —
+is **bit-identical** to filtering the raw records row by row with numpy:
+same row ids, same cardinality, and the same serialized bytes as the
+canonicalized oracle bitmap (so container *kinds* match too, not just
+values). Schemas, records, and predicates are generated from seeded
+randomness (via the ``_hypothesis_compat`` shim) on top of a fixed
+census-like workload shared with ``benchmarks/store_bench.py``.
+
+Also pinned here: the golden store corpus (``tests/corpus/golden_store_*``)
+— deterministic builds whose ``save()`` bytes are committed, covering
+array / bitmap / run / mixed posting containers and a bit-sliced column.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "benchmarks"))
+from synth import gen_census_like  # noqa: E402
+
+from repro import store  # noqa: E402
+from repro.core import py_roaring as pr  # noqa: E402
+from repro.roaring.format import RoaringFormatSpec as FS  # noqa: E402
+
+CORPUS = Path(__file__).parent / "corpus"
+
+
+# ---------------------------------------------------------------------------
+# the numpy row-filter oracle
+# ---------------------------------------------------------------------------
+
+def _oracle_mask(records: dict, n_rows: int, pred) -> np.ndarray:
+    """Evaluate a store predicate directly over the raw columns."""
+    if isinstance(pred, store.Eq):
+        return np.asarray(records[pred.col]) == pred.value
+    if isinstance(pred, store.In):
+        arr = np.asarray(records[pred.col])
+        mask = np.zeros(n_rows, bool)
+        for v in pred.values:
+            mask |= arr == v
+        return mask
+    if isinstance(pred, store.Range):
+        arr = np.asarray(records[pred.col])
+        mask = np.ones(n_rows, bool)
+        if pred.lo is not None:
+            mask &= arr >= pred.lo
+        if pred.hi is not None:
+            mask &= arr <= pred.hi
+        return mask
+    if isinstance(pred, store.AndP):
+        return np.logical_and.reduce(
+            [_oracle_mask(records, n_rows, c) for c in pred.children])
+    if isinstance(pred, store.OrP):
+        return np.logical_or.reduce(
+            [_oracle_mask(records, n_rows, c) for c in pred.children])
+    if isinstance(pred, store.NotP):
+        return ~_oracle_mask(records, n_rows, pred.child)
+    raise TypeError(pred)
+
+
+def _oracle_rb(records: dict, n_rows: int, pred) -> pr.RoaringBitmap:
+    ids = np.nonzero(_oracle_mask(records, n_rows, pred))[0]
+    return pr.RoaringBitmap.from_sorted_unique(ids).run_optimize()
+
+
+def _assert_matches(s: store.BitmapStore, records: dict, pred, *,
+                    paths=(False, True), check_count: bool = False) -> int:
+    """The differential property for one predicate. ``paths`` picks the
+    executor paths (False = per-op, True = fused) — every predicate shape
+    gets both somewhere in the suite, but each jitted tree pays a whole-
+    tree XLA compile on first use (per-op trees compile ~5x slower than
+    the fused tape), so the widest trees check one path each.
+    Returns |result|."""
+    oracle = _oracle_rb(records, s.n_rows, pred)
+    want = oracle.to_array()
+    want_bytes = FS.serialize(oracle)
+    for fused in paths:
+        rb = s.query(pred, fused=fused).to_roaring()
+        np.testing.assert_array_equal(rb.to_array(), want)
+        assert FS.serialize(rb) == want_bytes, \
+            f"non-canonical result for {pred} (fused={fused})"
+        if check_count:
+            assert s.count(pred, fused=fused) == want.size
+    if False in paths:
+        np.testing.assert_array_equal(s.query_indices(pred), want)
+    return want.size
+
+
+# ---------------------------------------------------------------------------
+# fixed census-like workload (shared generator with the benchmarks)
+# ---------------------------------------------------------------------------
+
+def _census_records(n_rows: int = 1500, seed: int = 1) -> dict:
+    records = gen_census_like(n_rows, seed)
+    # cap the integer columns to 5 / 4 bits: BSI tree *shapes* under test
+    # don't depend on magnitude, and every extra bit inflates the whole-
+    # tree XLA compile each jitted query pays on first use
+    records["int0"] = records["int0"] % 28
+    records["int1"] = records["int1"] % 13
+    # a string column (region names) so vkind="str" is in the suite
+    names = np.asarray(["east", "west", "north", "south"])
+    records["region"] = names[np.asarray(records["cat2"]) % 4]
+    return records
+
+
+@pytest.fixture(scope="module")
+def census():
+    records = _census_records()
+    s = store.BitmapStore.build(records, bsi=("int0", "int1"))
+    return s, records
+
+
+def test_census_schema(census):
+    s, records = census
+    assert s.n_rows == 1500
+    c = s.column("cat1")
+    assert c.vkind == "int" and list(c.values) == sorted(set(
+        np.asarray(records["cat1"]).tolist()))
+    assert s.column("region").vkind == "str"
+    assert s.column("int0").bits == int(records["int0"].max()).bit_length()
+    with pytest.raises(KeyError):
+        s.column("nope")
+
+
+def test_census_eq_in_queries(census):
+    s, records = census
+    hits = 0
+    hits += _assert_matches(s, records, store.eq("cat0", 0),
+                            check_count=True)
+    hits += _assert_matches(s, records, store.eq("region", "north"))
+    hits += _assert_matches(s, records, store.eq("cat3", 999))     # unseen
+    hits += _assert_matches(
+        s, records, store.in_("cat1", [0, 3, 5, 77]))              # mixed
+    hits += _assert_matches(s, records, store.in_("cat2", []))     # empty IN
+    hits += _assert_matches(s, records, store.eq("int0", 18),      # BSI eq
+                            paths=(True,))
+    hits += _assert_matches(
+        s, records, store.in_("int0", [0, 12, 400]), paths=(False,))
+    assert hits > 0
+
+
+def test_census_boolean_queries(census):
+    s, records = census
+    _assert_matches(s, records, store.and_(
+        store.eq("cat0", 1), store.eq("cat1", 2)))
+    _assert_matches(s, records, store.or_(
+        store.eq("cat2", 3), store.eq("cat2", 7), store.eq("region", "east")))
+    # NOT over the full row universe: complement of nothing is every row
+    assert _assert_matches(
+        s, records, store.not_(store.eq("cat0", 999))) == s.n_rows
+    # a provably-empty conjunction (a row has one cat0 value)
+    assert _assert_matches(s, records, store.and_(
+        store.eq("cat0", 0), store.eq("cat0", 1))) == 0
+    # nested: (cat0=0 | cat0=1) & !(region="west")
+    _assert_matches(s, records, store.and_(
+        store.or_(store.eq("cat0", 0), store.eq("cat0", 1)),
+        store.not_(store.eq("region", "west"))))
+
+
+def test_census_range_queries(census):
+    s, records = census
+    # over an integer *equality* column: OR of stored values in bounds
+    _assert_matches(s, records, store.range_("cat3", 10, 20))
+    _assert_matches(s, records, store.range_("cat3", lo=25))
+    _assert_matches(s, records, store.range_("cat3", hi=-1))       # empty
+    # over bit-sliced columns: the O'Neil/Quass slice-comparison tree.
+    # one closed range runs BOTH paths; the rest split per-op / fused to
+    # bound the per-tree compile bill (every k is a distinct tree shape)
+    _assert_matches(s, records, store.range_("int0", 5, 19))
+    _assert_matches(s, records, store.range_("int0", lo=21),
+                    paths=(False,))
+    _assert_matches(s, records, store.range_("int1", hi=7), paths=(True,))
+    _assert_matches(s, records, store.not_(store.range_("int1", 3, 9)),
+                    paths=(True,))
+    _assert_matches(s, records, store.and_(
+        store.range_("int0", 4, 22), store.eq("cat0", 1)), paths=(True,))
+
+
+def test_census_sum(census):
+    s, records = census
+    assert s.sum_("int0") == int(records["int0"].sum())
+    pred = store.eq("cat0", 1)
+    mask = _oracle_mask(records, s.n_rows, pred)
+    assert s.sum_("int0", pred) == int(records["int0"][mask].sum())
+    with pytest.raises(TypeError):
+        s.sum_("cat0")
+
+
+def test_census_save_load_roundtrip(census):
+    s, records = census
+    data = s.save()
+    assert data[:8] == store.STORE_MAGIC
+    s2 = store.BitmapStore.load(data, check=True)
+    assert s2.save() == data
+    assert s2.n_rows == s.n_rows and s2.columns == s.columns
+    # slot-exact slabs (slab equality implies query equality, so the
+    # reloaded store needs no re-compiled queries of its own)
+    for slot in range(s.n_slabs):
+        assert FS.serialize(s2.slot_bitmap(slot)) == \
+            FS.serialize(s.slot_bitmap(slot)), f"slot {slot} drifted"
+    assert s.index_size_in_bytes() == s2.index_size_in_bytes()
+
+
+def test_schema_type_errors(census):
+    s, _ = census
+    with pytest.raises(TypeError):
+        s.compile(store.range_("region", 0, 1))    # range over strings
+    with pytest.raises(TypeError):
+        s.compile(store.eq("cat0", "zero"))        # str value, int column
+    with pytest.raises(TypeError):
+        s.compile(store.eq("region", 3))           # int value, str column
+    with pytest.raises(KeyError):
+        s.compile(store.eq("nope", 1))
+    with pytest.raises(ValueError):
+        store.range_("cat0", 5, 1)                 # inverted bounds
+    with pytest.raises(ValueError):
+        store.range_("cat0")                       # no bounds
+    with pytest.raises(TypeError):
+        store.not_("cat0")                         # not a predicate
+
+
+def test_build_input_validation():
+    with pytest.raises(ValueError):
+        store.BitmapStore.build({})
+    with pytest.raises(ValueError):
+        store.BitmapStore.build({"a": np.arange(3), "b": np.arange(4)})
+    with pytest.raises(ValueError):
+        store.BitmapStore.build({"a": np.asarray([-1, 2])}, bsi=("a",))
+    with pytest.raises(TypeError):
+        store.BitmapStore.build({"a": np.asarray(["x", "y"])}, bsi=("a",))
+    with pytest.raises(ValueError):
+        store.BitmapStore.build({"a": np.arange(3)}, bsi=("b",))
+    with pytest.raises(TypeError):
+        store.BitmapStore.build({"a": np.asarray([1.5, 2.5])})
+
+
+def test_empty_store():
+    """Zero rows: every query is empty, including NOT (empty universe)."""
+    records = {"a": np.empty(0, np.int64), "b": np.empty(0, np.int64)}
+    s = store.BitmapStore.build(records, bsi=("b",))
+    for pred in (store.eq("a", 0), store.not_(store.eq("a", 0)),
+                 store.range_("b", 0, 5)):
+        assert _assert_matches(s, records, pred) == 0
+    assert s.sum_("b") == 0
+    data = s.save()
+    assert store.BitmapStore.load(data).save() == data
+
+
+def test_high_cardinality_column():
+    """>4096 distinct values: more posting slabs than a chunk has array
+    slots — the store must not conflate slab count with container limits."""
+    n = 4500
+    records = {"uid": np.arange(n, dtype=np.int64)}
+    s = store.BitmapStore.build(records)
+    assert len(s.column("uid").values) == n
+    assert s.n_slabs == n + 2
+    _assert_matches(s, records, store.eq("uid", 2048))
+    _assert_matches(s, records, store.in_("uid", [0, 1, n - 1, n]),
+                    paths=(False,))
+    _assert_matches(s, records, store.range_("uid", 1000, 1010),
+                    paths=(True,))
+    data = s.save()
+    assert store.BitmapStore.load(data).save() == data
+
+
+# ---------------------------------------------------------------------------
+# randomized schemas / records / predicates (seeded; shim-driven)
+# ---------------------------------------------------------------------------
+
+_STR_POOL = ("a", "b", "c", "dd", "e")
+
+
+def _rand_records(rng: np.random.Generator):
+    """A small random schema: 1-2 int equality columns, maybe a string
+    column, maybe a narrow BSI column. Returns (records, bsi_names)."""
+    n_rows = int(rng.integers(0, 260))
+    records = {}
+    for i in range(int(rng.integers(1, 3))):
+        card = int(rng.integers(1, 9))
+        records[f"c{i}"] = rng.integers(0, card, n_rows).astype(np.int64)
+    if rng.random() < 0.5:
+        records["s"] = np.asarray(_STR_POOL)[
+            rng.integers(0, len(_STR_POOL), n_rows)]
+    bsi = ()
+    if rng.random() < 0.7:
+        # 3-bit values: range trees stay a handful of nodes, so the whole-
+        # tree compile each fresh shape pays stays in seconds
+        records["v"] = rng.integers(0, 8, n_rows).astype(np.int64)
+        bsi = ("v",)
+    return records, bsi
+
+
+def _rand_pred(rng: np.random.Generator, records: dict, bsi, depth: int):
+    if depth <= 0 or rng.random() < 0.45:
+        col = list(records)[int(rng.integers(0, len(records)))]
+        arr = np.asarray(records[col])
+        if col in bsi or arr.dtype.kind == "i":
+            pool = [int(v) for v in
+                    (arr[rng.integers(0, arr.size, 3)] if arr.size
+                     else rng.integers(0, 9, 3))]
+            pool.append(int(rng.integers(-2, 12)))       # maybe unseen
+            k = rng.integers(0, 3)
+            if k == 0:
+                return store.eq(col, pool[int(rng.integers(0, len(pool)))])
+            if k == 1:
+                return store.in_(col, rng.permutation(pool)[
+                    : int(rng.integers(0, 4))].tolist())
+            lo, hi = sorted(pool[:2])
+            which = rng.integers(0, 3)
+            return store.range_(col, None if which == 0 else lo,
+                                None if which == 1 else hi)
+        v = _STR_POOL[int(rng.integers(0, len(_STR_POOL)))]
+        if rng.integers(0, 2):
+            return store.eq(col, v)
+        return store.in_(col, [v, "zz"])
+    k = rng.integers(0, 3)
+    if k == 0:
+        return store.not_(_rand_pred(rng, records, bsi, depth - 1))
+    kids = [_rand_pred(rng, records, bsi, depth - 1)
+            for _ in range(int(rng.integers(2, 4)))]
+    return store.and_(*kids) if k == 1 else store.or_(*kids)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1 << 30))
+def test_prop_random_store_queries(seed):
+    """Random schema + records + predicates vs the numpy oracle: fused for
+    every predicate (the cheap-compile path), per-op for the first — both
+    paths covered with a bounded compile bill."""
+    rng = np.random.default_rng(seed)
+    records, bsi = _rand_records(rng)
+    s = store.BitmapStore.build(records, bsi=bsi)
+    for i in range(3):
+        pred = _rand_pred(rng, records, bsi, depth=2)
+        _assert_matches(s, records, pred,
+                        paths=(True, False) if i == 0 else (True,))
+    data = s.save()
+    assert store.BitmapStore.load(data).save() == data
+
+
+# ---------------------------------------------------------------------------
+# golden store corpus: committed bytes of deterministic builds
+# ---------------------------------------------------------------------------
+
+def golden_recipes():
+    """name -> (records, bsi) for each committed golden store. Every build
+    input is derived from a seeded Generator, so the corpus is reproducible
+    bit-for-bit (regenerate via ``python tests/test_store.py``)."""
+    out = {}
+    rng = np.random.default_rng(0x60_1D)
+    # sparse postings -> array containers
+    out["array"] = ({"a": rng.integers(0, 50, 3000).astype(np.int64)}, ())
+    # two dense random values over 30k rows -> bitmap containers
+    out["bitmap"] = ({"d": rng.integers(0, 2, 30000).astype(np.int64)}, ())
+    # sorted rows -> every posting is one run -> run containers
+    out["run"] = ({"r": np.repeat(np.arange(8, dtype=np.int64), 2500)}, ())
+    # all three kinds plus strings in one store
+    out["mixed"] = ({
+        "a": rng.integers(0, 40, 20000).astype(np.int64),
+        "d": rng.integers(0, 3, 20000).astype(np.int64),
+        "r": np.repeat(np.arange(4, dtype=np.int64), 5000),
+        "s": np.asarray(_STR_POOL)[rng.integers(0, len(_STR_POOL), 20000)],
+    }, ())
+    # a bit-sliced column (8 bits)
+    out["bsi"] = ({"v": rng.integers(0, 200, 5000).astype(np.int64)}, ("v",))
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(golden_recipes()))
+def test_golden_store_corpus(name):
+    """Committed golden bytes == a fresh deterministic build's ``save()``,
+    and load -> save is byte-exact (the durable format is pinned)."""
+    records, bsi = golden_recipes()[name]
+    path = CORPUS / f"golden_store_{name}.bin"
+    assert path.exists(), f"golden corpus missing: {path.name}"
+    golden = path.read_bytes()
+    s = store.BitmapStore.build(records, bsi=bsi)
+    assert s.save() == golden, f"{path.name} drifted from a fresh build"
+    assert store.BitmapStore.load(golden, check=True).save() == golden
+
+
+def test_golden_corpus_kinds():
+    """The corpus actually covers all three container kinds."""
+    recipes = golden_recipes()
+    kinds = set()
+    for name in ("array", "bitmap", "run"):
+        records, bsi = recipes[name]
+        s = store.BitmapStore.build(records, bsi=bsi)
+        for rb in (s.slot_bitmap(i) for i in range(2, s.n_slabs)):
+            kinds.update(type(c).__name__ for c in rb.containers)
+    assert {"ArrayContainer", "BitmapContainer", "RunContainer"} <= kinds
+
+
+if __name__ == "__main__":
+    CORPUS.mkdir(exist_ok=True)
+    for name, (records, bsi) in golden_recipes().items():
+        path = CORPUS / f"golden_store_{name}.bin"
+        path.write_bytes(store.BitmapStore.build(records, bsi=bsi).save())
+        print(f"wrote {path} ({path.stat().st_size} bytes)")
