@@ -165,6 +165,22 @@ STORE_QUERY_WAH_ROWS = (
 )
 STORE_QUERY_WAH_FLOOR = 1.2
 
+# obs/* rows gate the PR 9 telemetry plane. The disabled row's derived
+# column is raw/instrumented on the same warm jitted fused store query
+# (median of alternating trials): telemetry off must stay within 5% of
+# the pre-telemetry body, so the floor is 0.95 parity, not a speedup.
+# obs/query/enabled is recorded ungated — tracing is allowed to cost.
+OBS_ROWS = (
+    "obs/query/disabled",
+)
+OBS_FLOOR = 0.95
+# derived is exactly 1.0 when measured launch counters == the analytic
+# model on every checked tree, 0.0 otherwise — a hard accounting gate.
+OBS_CROSSCHECK_ROWS = (
+    "obs/crosscheck/fused_launches",
+)
+OBS_CROSSCHECK_FLOOR = 1.0
+
 
 def check_speedups(fresh_path: str, floor: float,
                    api_floor: float = API_FLOOR) -> int:
@@ -185,7 +201,9 @@ def check_speedups(fresh_path: str, floor: float,
                              STORE_SIZE_SORTED_CONCISE_FLOOR),
                             (STORE_QUERY_ROWS, STORE_QUERY_FLOOR),
                             (STORE_QUERY_OR_ROWS, STORE_QUERY_OR_FLOOR),
-                            (STORE_QUERY_WAH_ROWS, STORE_QUERY_WAH_FLOOR)):
+                            (STORE_QUERY_WAH_ROWS, STORE_QUERY_WAH_FLOOR),
+                            (OBS_ROWS, OBS_FLOOR),
+                            (OBS_CROSSCHECK_ROWS, OBS_CROSSCHECK_FLOOR)):
         for name in rows:
             if name not in derived:
                 continue

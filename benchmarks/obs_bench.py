@@ -1,0 +1,119 @@
+"""Telemetry-plane benchmarks: the off-by-default cost contract and the
+measured-vs-analytic launch-accounting cross-check.
+
+``obs/query/*`` rows measure the same warm jitted fused
+``BitmapStore.query`` three ways — the pre-telemetry query body inlined
+(predicate compile + cache lookup + jitted call, no obs code at all),
+the instrumented ``query()`` with telemetry disabled (the state every
+non-observing user runs), and with telemetry enabled. The disabled row's
+derived column is the median of per-trial raw/instrumented ratios with
+alternating measurement order (the ``api_ab`` methodology — a transient
+stall in one measurement cannot fake an overhead), and ``compare.py``
+gates it at >= 0.95x: telemetry off must cost under 5% on the hot path.
+The enabled row is recorded ungated — spans, launch events, and gauge
+refreshes are allowed to cost real time when someone is watching.
+
+``obs/crosscheck/fused_launches`` runs ``obs.launch_crosscheck`` on fused
+N=4 and N=16 AND trees; derived is 1.0 only when the measured launch
+counters equal the analytic model on every tree, gated at 1.0 — an
+accounting bug fails CI, not just a unit test.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+
+def _t(fn, repeats=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def overhead_ab(quick: bool = False):
+    import repro.obs as obs
+    from repro.store import BitmapStore
+    from repro.store import predicate as P
+
+    rng = np.random.default_rng(42)
+    n = 20_000 if quick else 50_000
+    recs = {"city": rng.integers(0, 8, n), "sex": rng.integers(0, 2, n),
+            "age": rng.integers(0, 100, n)}
+    store = BitmapStore.build(recs, bsi=("age",))
+    pred = P.and_(P.eq("city", 3), P.eq("sex", 1), P.range_("age", 18, 65))
+
+    with obs.telemetry_scope(on=False):
+        store.query(pred, fused=True)         # warm: compile + jit once
+
+    def raw():
+        # the pre-telemetry query() body: predicate compile, cache lookup,
+        # jitted whole-call — zero obs code on the path
+        expr = store.compile(pred)
+        return store._query_fns[(expr, True, None)](store._stack)
+
+    def instrumented():
+        return store.query(pred, fused=True)
+
+    repeats = 20 if quick else 40
+    us_raw, us_dis, us_en = [], [], []
+    for trial in range(7):
+        with obs.telemetry_scope(on=False):
+            pairs = [(us_raw, raw), (us_dis, instrumented)]
+            if trial % 2:                     # kill ordering/thermal bias
+                pairs.reverse()
+            for acc, fn in pairs:
+                acc.append(_t(fn, repeats))
+        with obs.telemetry_scope():
+            us_en.append(_t(instrumented, repeats))
+    obs.reset_traces()                        # drop the spans we generated
+
+    def med_ratio(a, b):
+        return float(np.median(np.asarray(a) / np.asarray(b)))
+
+    return [
+        ("obs/query/raw_jitted", round(min(us_raw), 1), ""),
+        ("obs/query/disabled", round(min(us_dis), 1),
+         round(med_ratio(us_raw, us_dis), 2)),
+        ("obs/query/enabled", round(min(us_en), 1),
+         round(med_ratio(us_raw, us_en), 2)),
+    ]
+
+
+def crosscheck(quick: bool = False):
+    import repro.index as index
+    import repro.obs as obs
+    from repro import roaring
+
+    # tiny capacity: the crosscheck runs the EAGER engine (the jit cache
+    # would swallow per-dispatch launch events), and eager combines pay a
+    # per-tree-node compile on CPU — keep the arrays small
+    C = 2
+    rng = np.random.default_rng(7)
+    slabs = [roaring.RoaringSlab.from_values(
+        np.unique(rng.integers(0, C << 16, 3000)), C, 1 << 14)
+        for _ in range(16)]
+    stack = roaring.stack(slabs, capacity=C)
+
+    us, ok = [], True
+    for N in (4, 16):
+        expr = index.and_(*[index.leaf(i) for i in range(N)])
+        t0 = time.perf_counter()
+        r = obs.launch_crosscheck(stack, expr)
+        us.append((time.perf_counter() - t0) * 1e6)
+        ok = ok and r["match"]
+        print(f"# obs crosscheck and_n{N}: fused {r['fused_measured']}"
+              f"/{r['fused_model']}  per-op {r['per_op_measured']}"
+              f"/{r['per_op_model']}  match={r['match']}",
+              file=sys.stderr, flush=True)
+    return [("obs/crosscheck/fused_launches", round(sum(us), 1),
+             1.0 if ok else 0.0)]
+
+
+def run(quick: bool = False):
+    return overhead_ab(quick) + crosscheck(quick)

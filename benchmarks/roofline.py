@@ -89,12 +89,46 @@ def fused_model(n_containers: int = 64):
     return "\n".join(lines)
 
 
+def measured_table(ns=(4, 16)):
+    """Measured-vs-model launch counts: run each AND tree through the eager
+    engine with telemetry on (``repro.obs.launch_crosscheck``) and put the
+    measured kernel-launch counters next to the analytic model's. Small
+    capacity — this exists to audit the *accounting*, not to time anything."""
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import repro.index as index
+    import repro.obs as obs
+    from repro import roaring
+
+    C = 2
+    rng = np.random.default_rng(7)
+    slabs = [roaring.RoaringSlab.from_values(
+        np.unique(rng.integers(0, C << 16, 3000)), C, 1 << 14)
+        for _ in range(max(ns))]
+    stack = roaring.stack(slabs, capacity=C)
+    lines = ["| tree | fused measured | fused model | per-op measured | "
+             "per-op model (dispatches) | per-op combines | match |",
+             "|" + "---|" * 7]
+    for N in ns:
+        expr = index.and_(*[index.leaf(i) for i in range(N)])
+        r = obs.launch_crosscheck(stack, expr)
+        lines.append(
+            f"| and_n{N} | {r['fused_measured']} | {r['fused_model']} | "
+            f"{r['per_op_measured']} | {r['per_op_model']} | "
+            f"{r['per_op_combines']} | {'yes' if r['match'] else 'NO'} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="artifacts/dryrun")
     ap.add_argument("--mesh", default="pod16x16")
     ap.add_argument("--containers", type=int, default=64,
                     help="container columns for the fused traffic model")
+    ap.add_argument("--measured", action="store_true",
+                    help="also run the fused trees eagerly with telemetry "
+                         "on and print measured vs modeled launch counts")
     args = ap.parse_args()
     recs = load(args.dir, args.mesh)
     print(f"## Roofline ({args.mesh}, {len(recs)} cells)\n")
@@ -108,6 +142,10 @@ def main():
     print(f"\n## Fused tree evaluator: modeled launches / HBM traffic "
           f"(C={args.containers})\n")
     print(fused_model(args.containers))
+    if args.measured:
+        print("\n## Measured vs modeled kernel launches (telemetry "
+              "counters, eager engine)\n")
+        print(measured_table())
 
 
 if __name__ == "__main__":

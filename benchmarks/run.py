@@ -2,6 +2,10 @@
 roofline sections for the JAX framework layers.
 
 Prints ``name,us_per_call,derived`` CSV rows and writes artifacts/bench.json.
+Every run also writes artifacts/telemetry.json (``repro.obs`` report):
+environment metadata (jax/jaxlib version, backend, host), per-section wall
+times, and whatever counters/spans the instrumented layers emitted while
+telemetry was on.
 """
 
 from __future__ import annotations
@@ -10,6 +14,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 
 def main() -> None:
@@ -18,20 +23,40 @@ def main() -> None:
     ap.add_argument("--sections", default="all",
                     help="comma list: fig2ab,fig2cd,fig2ef,tables,alg4,"
                          "dispatch,compressruns,kernels,fused,jax,robust,"
-                         "store")
+                         "store,obs")
     args = ap.parse_args()
 
     from . import paper_figures as pf
 
     sections = args.sections.split(",") if args.sections != "all" else [
         "fig2ab", "fig2cd", "fig2ef", "tables", "alg4", "dispatch",
-        "compressruns", "kernels", "fused", "jax", "robust", "store"]
+        "compressruns", "kernels", "fused", "jax", "robust", "store", "obs"]
     rows = []
+    section_s = {}
+
+    # telemetry on for the whole run: counters/spans from the instrumented
+    # layers land in artifacts/telemetry.json. The obs overhead A/B opens
+    # its own telemetry_scope(on=False) windows, so its disabled-path
+    # timings are not contaminated by this.
+    try:
+        import repro.obs as obs
+        obs.enable()
+    except ImportError:
+        obs = None
 
     def run(name, fn):
         if name in sections:
             print(f"# --- {name} ---", file=sys.stderr, flush=True)
-            rows.extend(fn())
+            t0 = time.perf_counter()
+            try:
+                rows.extend(fn())
+            except ImportError:
+                print(f"# {name} section unavailable", file=sys.stderr)
+                return
+            dt = time.perf_counter() - t0
+            section_s[name] = round(section_s.get(name, 0.0) + dt, 3)
+            print(f"# --- {name} done in {dt:.1f}s ---", file=sys.stderr,
+                  flush=True)
 
     r = 2 if args.quick else 3
     run("fig2ab", lambda: pf.fig2ab_compression(repeats=r))
@@ -44,45 +69,36 @@ def main() -> None:
     run("dispatch", lambda: pf.dispatch_ab_sweep(repeats=r))
     run("compressruns", lambda: pf.run_compression())
 
-    if "kernels" in sections:
-        try:
-            from . import kernel_bench
-            print("# --- kernels ---", file=sys.stderr, flush=True)
-            rows.extend(kernel_bench.run(quick=args.quick))
-        except ImportError:
-            print("# kernels section unavailable", file=sys.stderr)
+    def _kernels():
+        from . import kernel_bench
+        return kernel_bench.run(quick=args.quick)
 
-    if "fused" in sections:
-        try:
-            from . import kernel_bench
-            print("# --- fused ---", file=sys.stderr, flush=True)
-            rows.extend(kernel_bench.fused_ab(quick=args.quick))
-        except ImportError:
-            print("# fused section unavailable", file=sys.stderr)
+    def _fused():
+        from . import kernel_bench
+        return kernel_bench.fused_ab(quick=args.quick)
 
-    if "jax" in sections:
-        try:
-            from . import jax_bench
-            print("# --- jax ---", file=sys.stderr, flush=True)
-            rows.extend(jax_bench.run(quick=args.quick))
-        except ImportError:
-            print("# jax section unavailable", file=sys.stderr)
+    def _jax():
+        from . import jax_bench
+        return jax_bench.run(quick=args.quick)
 
-    if "robust" in sections:
-        try:
-            from . import robust_bench
-            print("# --- robust ---", file=sys.stderr, flush=True)
-            rows.extend(robust_bench.run(quick=args.quick))
-        except ImportError:
-            print("# robust section unavailable", file=sys.stderr)
+    def _robust():
+        from . import robust_bench
+        return robust_bench.run(quick=args.quick)
 
-    if "store" in sections:
-        try:
-            from . import store_bench
-            print("# --- store ---", file=sys.stderr, flush=True)
-            rows.extend(store_bench.run(quick=args.quick))
-        except ImportError:
-            print("# store section unavailable", file=sys.stderr)
+    def _store():
+        from . import store_bench
+        return store_bench.run(quick=args.quick)
+
+    def _obs():
+        from . import obs_bench
+        return obs_bench.run(quick=args.quick)
+
+    run("kernels", _kernels)
+    run("fused", _fused)
+    run("jax", _jax)
+    run("robust", _robust)
+    run("store", _store)
+    run("obs", _obs)
 
     print("name,us_per_call,derived")
     for name, t, d in rows:
@@ -92,6 +108,14 @@ def main() -> None:
     with open("artifacts/bench.json", "w") as f:
         json.dump([{"name": n, "us_per_call": t, "derived": d}
                    for n, t, d in rows], f, indent=1)
+
+    if obs is not None:
+        from repro.obs import report as _report
+        _report.write_report("artifacts/telemetry.json",
+                             extra={"sections": section_s})
+        obs.disable()
+        print("# wrote artifacts/telemetry.json "
+              f"(sections: {section_s})", file=sys.stderr)
 
 
 if __name__ == "__main__":

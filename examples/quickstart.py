@@ -142,6 +142,22 @@ def main():
     print(f"store: {s!r}\n  |{pred.__class__.__name__}| = {rows.size} rows, "
           f"sum(age | kind=b) = {total}, saved {len(blob)} bytes")
 
+    # --- telemetry (PR 9): trace a query, read the launch accounting ------------------
+    # off by default; enable() turns on spans + the kernel launch hook, and
+    # every store.query phase (compile, cached execute, eager fallback)
+    # shows up as a span with the launch counters alongside
+    import repro.obs as obs
+
+    obs.enable()
+    traced = store.and_(store.eq("city", 3), store.range_("age", 18, 65))
+    s.query(traced, fused=True)              # cache miss: compile + execute
+    s.query(traced, fused=True)              # cache hit: no retrace, no launch
+    report = obs.collect()
+    print("\n" + obs.render_text(report))
+    assert obs.span_trees(), "traced query produced no span tree"
+    assert obs.registry().total("roaring.launches") >= 1
+    obs.disable()
+
 
 if __name__ == "__main__":
     main()

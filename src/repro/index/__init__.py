@@ -21,8 +21,8 @@ unions, and ``grad_comp`` leaf-overlap scans.
 from repro.index.engine import (And, AndNot, DegradationStats, Expr, Leaf, Or,
                                 SlabLeaf, and_, andnot, batched_and_card,
                                 batched_and_card_sharded, degradation_stats,
-                                execute, execute_card, leaf, or_,
-                                reset_degradation, topk_by_card,
+                                execute, execute_card, launch_model, leaf,
+                                or_, reset_degradation, topk_by_card,
                                 topk_by_card_sharded, union_many_batched,
                                 wide_intersect, wide_union)
 from repro.index.stack import SlabStack, stack_from_slabs
@@ -34,6 +34,6 @@ __all__ = [
     "execute", "execute_card", "wide_union", "wide_intersect",
     "batched_and_card", "batched_and_card_sharded",
     "topk_by_card", "topk_by_card_sharded",
-    "union_many_batched",
+    "union_many_batched", "launch_model",
     "DegradationStats", "degradation_stats", "reset_degradation",
 ]

@@ -39,6 +39,7 @@ from typing import Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs
 from repro.core import jax_roaring as jr
 from repro.kernels.roaring import fused as _fused
 from repro.roaring.slab import RoaringSlab, SlabLike, _to_internal, _wrap
@@ -49,7 +50,7 @@ __all__ = [
     "execute", "execute_card", "wide_union", "wide_intersect",
     "batched_and_card", "batched_and_card_sharded",
     "topk_by_card", "topk_by_card_sharded",
-    "union_many_batched",
+    "union_many_batched", "launch_model",
     "DegradationStats", "degradation_stats", "reset_degradation",
 ]
 
@@ -234,11 +235,12 @@ def _normalize(stack, expr):
 # fused evaluation: the whole tree in ONE launch (kernels.roaring.fused)
 # =============================================================================
 
-def _fused_compile(stack, keys, expr: Expr):
-    """Lower an ``Expr`` to the fused evaluator's inputs: the structural
-    tree (distinct leaves replaced by dense operand indices), the stacked
-    operand rows u16[N, C, 4096], and the packed lift meta. Distinct leaves
-    are deduplicated — a leaf referenced twice streams from HBM once."""
+def _lower_tree(expr: Expr) -> tuple:
+    """Structural lowering shared by the fused compiler and the launch
+    model: ``(tree, order)`` where ``tree`` is the hash-consable structure
+    with distinct leaves replaced by dense operand indices and ``order`` the
+    deduplicated leaf list — a leaf referenced twice streams from HBM
+    once."""
     order: list = []
     index_of: dict = {}
 
@@ -260,7 +262,55 @@ def _fused_compile(stack, keys, expr: Expr):
             order.append(e)
         return index_of[key]
 
-    tree = visit(expr)
+    return visit(expr), order
+
+
+def launch_model(expr: Expr, *, stacked: bool = True) -> dict:
+    """Analytic kernel-launch accounting for one expression — the model the
+    ``repro.obs`` telemetry plane cross-checks measured launch counters
+    against (``obs.launch_crosscheck``).
+
+    Two granularities matter. ``per_op_combines`` is the roofline model's
+    logical combine count (``fused.plan_stats``'s ``launches_per_op``:
+    N-1 for an N-leaf tree). ``per_op_dispatches`` is what the per-op
+    engine *actually* launches through ``ops.intersect_dispatch``: AND
+    combines over all-``Leaf`` children batch into a log-depth tree reduce
+    (``ceil(log2 n)`` dispatches when ``stacked``, the ``execute``
+    default), mixed-children ANDs fold pairwise (n-1 dispatches), and
+    OR/ANDNOT combines run as jnp-level row algebra — zero kernel
+    dispatches. ``fused_launches`` is always 1: the whole tree is one
+    ``ops.fused_tree`` launch.
+    """
+    tree, order = _lower_tree(expr)
+    plan = _fused.plan_tape(tree)
+
+    def dispatches(e) -> int:
+        if isinstance(e, (Leaf, SlabLeaf)):
+            return 0
+        if isinstance(e, And):
+            n = len(e.children)
+            if stacked and all(isinstance(c, Leaf) for c in e.children):
+                return (n - 1).bit_length()
+            return (n - 1) + sum(dispatches(c) for c in e.children)
+        if isinstance(e, Or):
+            return sum(dispatches(c) for c in e.children)
+        if isinstance(e, AndNot):
+            return dispatches(e.a) + dispatches(e.b)
+        raise TypeError(f"not an Expr: {e!r}")
+
+    return {
+        "n_operands": len(order),
+        "per_op_combines": int(plan.n_ops),
+        "per_op_dispatches": dispatches(expr),
+        "fused_launches": 1,
+    }
+
+
+def _fused_compile(stack, keys, expr: Expr):
+    """Lower an ``Expr`` to the fused evaluator's inputs: the structural
+    tree (via ``_lower_tree``), the stacked operand rows u16[N, C, 4096],
+    and the packed lift meta."""
+    tree, order = _lower_tree(expr)
     states = []
     for e in order:
         if isinstance(e, Leaf):
@@ -298,9 +348,14 @@ def _fused_eval(stack, keys, expr: Expr):
 
 @dataclasses.dataclass
 class DegradationStats:
-    """Counters for the query engine's failure ladder: how many dispatch
-    attempts failed, how many retries the preferred backend got, and how
-    many queries completed degraded on the XLA reference backend."""
+    """Snapshot view of the engine's failure-ladder counters: how many
+    dispatch attempts failed, how many retries the preferred backend got,
+    and how many queries completed degraded on a lower rung.
+
+    PR 9: the live counters moved to the ``repro.obs`` metrics registry
+    (``index.dispatch_failures`` / ``index.retries`` / ``index.fallbacks``,
+    plus per-rung ``index.rung_taken{kind,backend}``); this class survives
+    as the deprecated ``degradation_stats()`` return type."""
 
     dispatch_failures: int = 0
     retries: int = 0
@@ -310,13 +365,6 @@ class DegradationStats:
         return DegradationStats(self.dispatch_failures, self.retries,
                                 self.fallbacks)
 
-    def reset(self) -> None:
-        self.dispatch_failures = 0
-        self.retries = 0
-        self.fallbacks = 0
-
-
-_DEGRADATION = DegradationStats()
 
 # failure classes the ladder absorbs: injected faults and device/runtime
 # errors (preemption, OOM, ICI failures surface as XlaRuntimeError, a
@@ -325,45 +373,73 @@ _DEGRADATION = DegradationStats()
 # untouched — degrading cannot fix a malformed query.
 _FALLBACK_ERRORS = (RuntimeError, jax.errors.JaxRuntimeError)
 
+_LADDER_COUNTERS = ("index.dispatch_failures", "index.retries",
+                    "index.fallbacks", "index.rung_taken")
+
 
 def degradation_stats() -> DegradationStats:
-    """A snapshot of the engine-wide degradation counters."""
-    return _DEGRADATION.snapshot()
+    """Deprecated: read the ``repro.obs`` registry instead —
+    ``obs.registry().value("index.dispatch_failures")`` etc. This shim
+    snapshots those counters into the legacy ``DegradationStats`` shape."""
+    import warnings
+
+    warnings.warn(
+        "repro.index.degradation_stats() is deprecated; read the "
+        "repro.obs metrics registry ('index.dispatch_failures', "
+        "'index.retries', 'index.fallbacks') instead",
+        DeprecationWarning, stacklevel=2)
+    reg = obs.registry()
+    return DegradationStats(
+        int(reg.value("index.dispatch_failures")),
+        int(reg.value("index.retries")),
+        int(reg.value("index.fallbacks")))
 
 
 def reset_degradation() -> None:
     """Zero the engine-wide degradation counters (test isolation)."""
-    _DEGRADATION.reset()
+    reg = obs.registry()
+    for name in _LADDER_COUNTERS:
+        reg.remove(name)
 
 
 def _run_ladder(rungs, max_retries: int, backoff_s: float):
-    """Run the first workable rung of ``rungs``: ordered ``(backend, fn)``
-    pairs, most-preferred first.
+    """Run the first workable rung of ``rungs``: ordered ``(backend, kind,
+    fn)`` triples, most-preferred first (``kind`` is the evaluator rung:
+    ``"fused"`` / ``"per_op"``).
 
     The first rung gets ``max_retries`` retries with exponential backoff
     (transient device faults deserve a second chance before giving up on
     the fast path); later rungs get one attempt each. Every failed attempt
-    counts in ``dispatch_failures``; every rung drop counts in
-    ``fallbacks``. A failure on the last rung propagates — there is nothing
+    counts in ``index.dispatch_failures``; every rung drop counts in
+    ``index.fallbacks``; the winning rung counts in
+    ``index.rung_taken{kind,backend}``. Each attempt runs under an
+    ``index.rung`` span, so injected faults show up as errored child spans
+    in the trace. A failure on the last rung propagates — there is nothing
     left to degrade to.
     """
     from repro.kernels.roaring import ops as _kops
 
-    for r, (rung_backend, fn) in enumerate(rungs):
+    reg = obs.registry()
+    for r, (rung_backend, rung_kind, fn) in enumerate(rungs):
         tries = (max_retries + 1) if r == 0 else 1
         for attempt in range(tries):
             try:
-                with _kops.backend_scope(rung_backend):
-                    return fn()
+                with obs.span("index.rung", kind=rung_kind,
+                              backend=rung_backend, attempt=attempt):
+                    with _kops.backend_scope(rung_backend):
+                        out = fn()
+                reg.counter("index.rung_taken", kind=rung_kind,
+                            backend=rung_backend).inc()
+                return out
             except _FALLBACK_ERRORS:
                 if r == len(rungs) - 1 and attempt == tries - 1:
                     raise
-                _DEGRADATION.dispatch_failures += 1
+                reg.counter("index.dispatch_failures").inc()
                 if attempt < tries - 1:
-                    _DEGRADATION.retries += 1
+                    reg.counter("index.retries").inc()
                     if backoff_s > 0:
                         time.sleep(backoff_s * (2 ** attempt))
-        _DEGRADATION.fallbacks += 1
+        reg.counter("index.fallbacks").inc()
 
 
 def _run_degradable(fn, backend: Optional[str], max_retries: int,
@@ -373,16 +449,20 @@ def _run_degradable(fn, backend: Optional[str], max_retries: int,
     ``backend=None``/"auto" resolves to the hardware default. A preferred
     non-"xla" backend gets ``max_retries`` retries with exponential backoff;
     when they are exhausted the query degrades to the XLA reference backend
-    (bit-identical math, counted in ``degradation_stats().fallbacks``).
+    (bit-identical math, counted in the registry's ``index.fallbacks``).
     """
     from repro.kernels.roaring import ops as _kops
 
     preferred = backend or _kops.current_backend()
     if preferred == "xla":
-        with _kops.backend_scope("xla"):
-            return fn()
-    return _run_ladder([(preferred, fn), ("xla", fn)], max_retries,
-                       backoff_s)
+        with obs.span("index.rung", kind="per_op", backend="xla"):
+            with _kops.backend_scope("xla"):
+                out = fn()
+        obs.registry().counter("index.rung_taken", kind="per_op",
+                               backend="xla").inc()
+        return out
+    return _run_ladder([(preferred, "per_op", fn), ("xla", "per_op", fn)],
+                       max_retries, backoff_s)
 
 
 def _run_query(fused_fn, per_op_fn, fused: bool, backend: Optional[str],
@@ -397,9 +477,9 @@ def _run_query(fused_fn, per_op_fn, fused: bool, backend: Optional[str],
     if not fused:
         return _run_degradable(per_op_fn, backend, max_retries, backoff_s)
     preferred = backend or _kops.current_backend()
-    rungs = [(preferred, fused_fn), (preferred, per_op_fn)]
+    rungs = [(preferred, "fused", fused_fn), (preferred, "per_op", per_op_fn)]
     if preferred != "xla":
-        rungs.append(("xla", per_op_fn))
+        rungs.append(("xla", "per_op", per_op_fn))
     return _run_ladder(rungs, max_retries, backoff_s)
 
 
@@ -425,8 +505,9 @@ def execute(stack: Optional[RoaringSlab], expr: Optional[Expr] = None,
     Dispatch failures on a non-"xla" backend (real device faults or a
     ``runtime.fault_tolerance.FaultPlan``) retry ``max_retries`` times with
     exponential backoff, then degrade rung by rung — fused to per-op,
-    preferred backend to the XLA reference — incrementing
-    ``degradation_stats()`` while results stay bit-identical.
+    preferred backend to the XLA reference — incrementing the ladder
+    counters on the ``repro.obs`` registry while results stay
+    bit-identical.
     """
     stack, expr = _normalize(stack, expr)
     keys = _shared_keys(stack, expr, capacity)
@@ -439,8 +520,14 @@ def execute(stack: Optional[RoaringSlab], expr: Optional[Expr] = None,
         data, card, kind = _fused_eval(stack, keys, expr)
         return _wrap(jr._finalize_rows(keys, data, card, kind))
 
-    return _run_query(fused_attempt, per_op, fused, backend, max_retries,
-                      backoff_s)
+    with obs.span("index.execute", fused=fused, backend=backend or "auto"):
+        if obs.enabled() and stack is not None:
+            obs.record_kinds("index.input_kinds", stack.kinds)
+        out = _run_query(fused_attempt, per_op, fused, backend, max_retries,
+                         backoff_s)
+        if obs.enabled():
+            obs.record_kinds("index.output_kinds", out.kinds)
+        return out
 
 
 def execute_card(stack: Optional[RoaringSlab],
@@ -465,8 +552,12 @@ def execute_card(stack: Optional[RoaringSlab],
         _, card, _ = _fused_eval(stack, keys, expr)
         return jnp.sum(card)
 
-    return _run_query(fused_attempt, per_op, fused, backend, max_retries,
-                      backoff_s)
+    with obs.span("index.execute_card", fused=fused,
+                  backend=backend or "auto"):
+        if obs.enabled() and stack is not None:
+            obs.record_kinds("index.input_kinds", stack.kinds)
+        return _run_query(fused_attempt, per_op, fused, backend, max_retries,
+                          backoff_s)
 
 
 def wide_union(stack: RoaringSlab) -> RoaringSlab:

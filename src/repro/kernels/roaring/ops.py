@@ -19,7 +19,14 @@ retracing —
   (raising there simulates a device/runtime failure at dispatch
   granularity). The hook fires at Python call time; inside an outer ``jit``
   trace that means once per trace, matching where a real lowering failure
-  would surface.
+  would surface;
+* ``add_launch_hook(fn)`` / ``remove_launch_hook(fn)`` (PR 9) subscribe
+  observers to every dispatch as a ``LaunchEvent(entry, backend)`` — the
+  seam the ``repro.obs`` telemetry plane counts kernel launches through.
+  Launch hooks fire *before* the fault hook, so a launch that the fault
+  plan then fails is still accounted (matching real hardware, where the
+  dispatch happened and then faulted). Launch hooks must not raise; any
+  exception from one is swallowed.
 
 Explicit ``use_pallas``/``interpret`` arguments always win over the scope
 override, so tests pinning a backend stay pinned.
@@ -28,8 +35,9 @@ override, so tests pinning a backend stay pinned.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +54,29 @@ def _on_tpu() -> bool:
 # -- per-launch controls ------------------------------------------------------
 _BACKEND_OVERRIDE: Optional[str] = None       # None == "auto"
 _FAULT_HOOK: Optional[Callable[[str], None]] = None
+_LAUNCH_HOOKS: Tuple[Callable[["LaunchEvent"], None], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchEvent:
+    """One kernel dispatch: which public entry point and which backend the
+    launch resolved to (``"pallas"`` / ``"xla"``)."""
+
+    entry: str
+    backend: str
+
+
+def add_launch_hook(hook: Callable[[LaunchEvent], None]) -> None:
+    """Subscribe an observer to every kernel dispatch. Idempotent."""
+    global _LAUNCH_HOOKS
+    if hook not in _LAUNCH_HOOKS:
+        _LAUNCH_HOOKS = _LAUNCH_HOOKS + (hook,)
+
+
+def remove_launch_hook(hook: Callable[[LaunchEvent], None]) -> None:
+    """Unsubscribe a launch observer (no-op if absent)."""
+    global _LAUNCH_HOOKS
+    _LAUNCH_HOOKS = tuple(h for h in _LAUNCH_HOOKS if h != hook)
 
 
 @contextlib.contextmanager
@@ -84,16 +115,26 @@ def set_fault_hook(hook: Optional[Callable[[str], None]]):
     return prev
 
 
-def _resolve(use_pallas: Optional[bool], interpret: bool) -> tuple:
+def _resolve(use_pallas: Optional[bool], interpret: bool,
+             entry: str = "dispatch") -> tuple:
     """Resolve (use_pallas, interpret) to concrete booleans: explicit args
-    win, then the scope override, then hardware auto-selection — and fire
-    the fault hook with the resolved backend name."""
+    win, then the scope override, then hardware auto-selection — then fire
+    the launch hooks (accounting) and the fault hook (injection) with the
+    resolved backend name, in that order so faulted launches still count."""
     if use_pallas is None and not interpret:
         use_pallas = current_backend() == "pallas"
     elif use_pallas is None:
         use_pallas = _on_tpu()
+    backend = "pallas" if (use_pallas or interpret) else "xla"
+    if _LAUNCH_HOOKS:
+        ev = LaunchEvent(entry, backend)
+        for hook in _LAUNCH_HOOKS:
+            try:
+                hook(ev)
+            except Exception:
+                pass
     if _FAULT_HOOK is not None:
-        _FAULT_HOOK("pallas" if (use_pallas or interpret) else "xla")
+        _FAULT_HOOK(backend)
     return use_pallas, interpret
 
 
@@ -108,7 +149,7 @@ def _container_op(a_bits, b_bits, kinds, op, use_pallas, interpret):
 def container_op(a_bits, b_bits, kinds, op: str = "or",
                  use_pallas: bool | None = None, interpret: bool = False):
     """Batched fused container op + popcount over key-aligned rows."""
-    use_pallas, interpret = _resolve(use_pallas, interpret)
+    use_pallas, interpret = _resolve(use_pallas, interpret, "container_op")
     return _container_op(a_bits, b_bits, kinds, op, use_pallas, interpret)
 
 
@@ -123,7 +164,7 @@ def _array_intersect(a_arr, b_arr, cards, use_pallas, interpret):
 def array_intersect(a_arr, b_arr, cards,
                     use_pallas: bool | None = None, interpret: bool = False):
     """Batched array-container intersection (vectorized galloping)."""
-    use_pallas, interpret = _resolve(use_pallas, interpret)
+    use_pallas, interpret = _resolve(use_pallas, interpret, "array_intersect")
     return _array_intersect(a_arr, b_arr, cards, use_pallas, interpret)
 
 
@@ -147,7 +188,8 @@ def intersect_dispatch(a_data, b_data, meta,
     compacts / lazily canonicalizes best-of-three on top of this. Pallas
     (``@pl.when`` skip) on TPU, XLA reference elsewhere.
     """
-    use_pallas, interpret = _resolve(use_pallas, interpret)
+    use_pallas, interpret = _resolve(use_pallas, interpret,
+                                     "intersect_dispatch")
     return _intersect_dispatch(a_data, b_data, meta, use_pallas, interpret)
 
 
@@ -184,7 +226,7 @@ def fused_tree(ops_data, meta, plan,
     runs the single best-of-three canonicalization. Pallas mega-kernel on
     TPU, tape-mirroring XLA evaluator elsewhere.
     """
-    use_pallas, interpret = _resolve(use_pallas, interpret)
+    use_pallas, interpret = _resolve(use_pallas, interpret, "fused_tree")
     return _fused_tree(ops_data, meta, plan, use_pallas, interpret)
 
 
@@ -200,6 +242,7 @@ def intersect_dispatch_stacked(a_data, b_data, meta,
     (hits u16[N, C, 4096], card i32[N, C]) with the same per-pair-class
     semantics as ``intersect_dispatch``.
     """
-    use_pallas, interpret = _resolve(use_pallas, interpret)
+    use_pallas, interpret = _resolve(use_pallas, interpret,
+                                     "intersect_dispatch_stacked")
     return _intersect_dispatch_stacked(a_data, b_data, meta, use_pallas,
                                        interpret)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -149,11 +150,28 @@ class ServeEngine:
             return int(np.argmax(row))
         return None
 
+    def _publish_gauges(self) -> None:
+        """Refresh the serving gauges (queue depth, page pool) on the
+        ``repro.obs`` registry — called per step while telemetry is on."""
+        reg = obs.registry()
+        reg.gauge("serve.queue_depth").set(len(self.queue))
+        reg.gauge("serve.active_seqs").set(len(self.active))
+        reg.gauge("serve.page_pool.free_pages").set(len(self.table.free))
+        reg.gauge("serve.page_pool.utilization").set(
+            float(self.table.utilization()))
+        reg.gauge("serve.requeues").set(self.requeues)
+        reg.gauge("serve.steps").set(self.steps_run)
+
     def step(self) -> None:
         """One continuous-batching iteration: admit, decode, retire."""
+        with obs.span("serve.step"):
+            self._step()
+        if obs.enabled():
+            self._publish_gauges()
+
+    def _step(self) -> None:
         self._admit()
         # batch one decode for every active sequence
-        page_ok = True
         active_slots = [i for i, r in enumerate(self.slots) if r is not None]
         if not active_slots:
             return

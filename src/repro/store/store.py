@@ -36,12 +36,14 @@ format; ``load()`` treats the bytes as untrusted — see ``repro.store.io``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro import index as ix
 from repro.core import jax_roaring as jr
 from repro.core import py_roaring as pr
@@ -54,6 +56,8 @@ __all__ = ["BitmapStore", "EqColumn", "BsiColumn",
 UNIVERSE_SLOT = 0          # all rows — the NOT / open-range operand
 EMPTY_SLOT = 1             # no rows — the unseen-value / empty-IN operand
 _RESERVED_SLOTS = 2
+
+_STORE_IDS = itertools.count()   # distinguishes per-store telemetry gauges
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +195,10 @@ class BitmapStore:
         # steady state milliseconds (expression dataclasses are frozen, so
         # they hash as cache keys)
         self._query_fns: Dict[Tuple, Callable] = {}
+        self._id = next(_STORE_IDS)
+        self._cache_hits = 0       # key already held a jitted executor
+        self._cache_misses = 0     # cold compile: new executor jitted
+        self._cache_fallbacks = 0  # jitted call failed -> eager ladder
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -377,6 +385,53 @@ class BitmapStore:
         return ix.andnot(ix.leaf(UNIVERSE_SLOT), e)
 
     # -- queries ---------------------------------------------------------------
+    def cache_stats(self) -> dict:
+        """Jit-query-cache accounting: ``hits`` (key already held a jitted
+        executor), ``misses`` (cold compiles), ``fallbacks`` (jitted call
+        failed and the query re-ran on the eager ladder — counted separately
+        from cold compiles), ``entries``, and what the cache is keyed by.
+        Also refreshes the ``store.query_cache.*{store=<id>}`` registry
+        gauges."""
+        self._publish_cache_gauges()
+        return {"hits": self._cache_hits, "misses": self._cache_misses,
+                "fallbacks": self._cache_fallbacks,
+                "entries": len(self._query_fns),
+                "keyed_by": "(expr, fused, backend)"}
+
+    def _publish_cache_gauges(self) -> None:
+        reg = obs.registry()
+        sid = self._id
+        reg.gauge("store.query_cache.hits", store=sid).set(self._cache_hits)
+        reg.gauge("store.query_cache.misses",
+                  store=sid).set(self._cache_misses)
+        reg.gauge("store.query_cache.fallbacks",
+                  store=sid).set(self._cache_fallbacks)
+        reg.gauge("store.query_cache.entries",
+                  store=sid).set(len(self._query_fns))
+
+    def _run_cached(self, key: Tuple, make_fn: Callable, eager_fn: Callable):
+        """One cached-executor run: cache lookup (hit/miss accounting), the
+        jitted call under a ``store.execute`` span, and the eager-ladder
+        fallback (its own span + counter) when the jitted call fails."""
+        fn = self._query_fns.get(key)
+        if fn is None:
+            # jax.jit wrapping is lazy: the actual trace+compile cost lands
+            # inside the first call, i.e. the cache=miss execute span
+            self._cache_misses += 1
+            cache = "miss"
+            fn = make_fn()
+            self._query_fns[key] = fn
+        else:
+            self._cache_hits += 1
+            cache = "hit"
+        try:
+            with obs.span("store.execute", cache=cache):
+                return fn(self._stack)
+        except Exception:
+            self._cache_fallbacks += 1
+            with obs.span("store.fallback_eager"):
+                return eager_fn()
+
     def query(self, pred: P.Pred, *, fused: bool = False,
               backend: Optional[str] = None, max_retries: int = 1,
               backoff_s: float = 0.0) -> RoaringSlab:
@@ -387,41 +442,44 @@ class BitmapStore:
         The whole call is jitted per compiled tree shape (first use pays one
         compile, repeats are launch-only). A failure inside the jitted call
         falls back to the eager engine, whose runtime retry/backoff ladder
-        the jit boundary would otherwise swallow.
+        the jit boundary would otherwise swallow. With telemetry enabled
+        (``repro.obs.enable()``) the call records a compile -> execute span
+        tree, output-kind histograms, and the query-cache gauges.
         """
-        expr = self.compile(pred)
-        key = (expr, fused, backend)
-        fn = self._query_fns.get(key)
-        if fn is None:
-            fn = jax.jit(lambda stack: ix.execute(
-                stack, expr, fused=fused, backend=backend))
-            self._query_fns[key] = fn
-        try:
-            return fn(self._stack)
-        except Exception:
-            return ix.execute(self._stack, expr, fused=fused,
-                              backend=backend, max_retries=max_retries,
-                              backoff_s=backoff_s)
+        with obs.span("store.query", fused=fused):
+            with obs.span("store.compile"):
+                expr = self.compile(pred)
+            out = self._run_cached(
+                (expr, fused, backend),
+                lambda: jax.jit(lambda stack: ix.execute(
+                    stack, expr, fused=fused, backend=backend)),
+                lambda: ix.execute(self._stack, expr, fused=fused,
+                                   backend=backend, max_retries=max_retries,
+                                   backoff_s=backoff_s))
+            if obs.enabled():
+                obs.record_kinds("store.output_kinds", out.kinds)
+                self._publish_cache_gauges()
+            return out
 
     def count(self, pred: P.Pred, *, fused: bool = False,
               backend: Optional[str] = None, max_retries: int = 1,
               backoff_s: float = 0.0) -> int:
         """|rows matching ``pred``| without materializing the result slab
         (jitted whole-call with the same cache/fallback as ``query``)."""
-        expr = self.compile(pred)
-        key = ("card", expr, fused, backend)
-        fn = self._query_fns.get(key)
-        if fn is None:
-            fn = jax.jit(lambda stack: ix.execute_card(
-                stack, expr, fused=fused, backend=backend))
-            self._query_fns[key] = fn
-        try:
-            return int(fn(self._stack))
-        except Exception:
-            return int(ix.execute_card(self._stack, expr, fused=fused,
-                                       backend=backend,
-                                       max_retries=max_retries,
-                                       backoff_s=backoff_s))
+        with obs.span("store.count", fused=fused):
+            with obs.span("store.compile"):
+                expr = self.compile(pred)
+            out = self._run_cached(
+                ("card", expr, fused, backend),
+                lambda: jax.jit(lambda stack: ix.execute_card(
+                    stack, expr, fused=fused, backend=backend)),
+                lambda: ix.execute_card(self._stack, expr, fused=fused,
+                                        backend=backend,
+                                        max_retries=max_retries,
+                                        backoff_s=backoff_s))
+            if obs.enabled():
+                self._publish_cache_gauges()
+            return int(out)
 
     def query_indices(self, pred: P.Pred, **kw) -> np.ndarray:
         """Matching row ids as a sorted host ``int64`` array."""

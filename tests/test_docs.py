@@ -29,13 +29,14 @@ def test_api_doc_covers_all_exports():
     import repro.index as ix
     import repro.kernels.roaring.dispatch as D
     import repro.kernels.roaring.fused as F
+    import repro.obs as OBS
     import repro.roaring as roaring
     import repro.roaring.validate as V
     import repro.store as S
 
     text = (ROOT / "docs" / "API.md").read_text()
     documented = _api_symbols(text)
-    for mod in (roaring, core, jr, D, F, ix, V, S):
+    for mod in (roaring, core, jr, D, F, ix, V, S, OBS):
         missing = [s for s in mod.__all__ if s not in documented]
         assert not missing, (mod.__name__, missing)
 
@@ -52,6 +53,7 @@ def test_api_doc_symbols_exist():
         "repro.kernels.roaring.dispatch": None, "repro.index": None,
         "repro.kernels.roaring.ops": None,
         "repro.kernels.roaring.fused": None, "repro.store": None,
+        "repro.obs": None,
     }
     current = None
     for line in text.splitlines():
